@@ -1,0 +1,28 @@
+"""Paper Fig. 11: co-location interference (solo-run vs co-run, closed
+loop).  Paper: corun-CFlow degrades ~40%, corun-FaaSFlow ~12%, others ~2%;
+DFlow keeps the best latency in both modes."""
+
+from repro.core import SYSTEMS, make_workflow, run_closed_loop
+
+BENCHES = ("WC", "FP", "Gen")
+N_PER_CLIENT = 4
+
+
+def run():
+    rows = []
+    for system in SYSTEMS:
+        solo = {}
+        for b in BENCHES:
+            r = run_closed_loop(system, [make_workflow(b)],
+                                n_per_client=N_PER_CLIENT)[0]
+            solo[b] = r.mean
+            rows.append((f"fig11/solo/{b}/{system}", r.mean * 1e6, ""))
+        co = run_closed_loop(system, [make_workflow(b) for b in BENCHES],
+                             n_per_client=N_PER_CLIENT)
+        degr = []
+        for b, r in zip(BENCHES, co):
+            rows.append((f"fig11/corun/{b}/{system}", r.mean * 1e6, ""))
+            degr.append(r.mean / max(solo[b], 1e-9) - 1.0)
+        rows.append((f"fig11/degradation/{system}", 0.0,
+                     f"{100 * sum(degr) / len(degr):.1f}%"))
+    return rows

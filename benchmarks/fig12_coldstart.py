@@ -1,0 +1,25 @@
+"""Paper Fig. 12: cold-start latency (first run minus second run) for
+CFlow / FaaSFlow / DFlow on the four scientific workflows.
+Paper: DFlow ≈5.6x better than CFlow, ≈1.1x better than FaaSFlow."""
+
+from repro.core import cold_start_latency, make_workflow
+
+BENCHES = ("Cyc", "Epi", "Gen", "Soy")
+
+
+def run():
+    rows = []
+    ratios_cf, ratios_ff = [], []
+    for bench in BENCHES:
+        wf = make_workflow(bench)
+        vals = {s: cold_start_latency(s, wf)
+                for s in ("cflow", "faasflow", "dflow")}
+        for s, v in vals.items():
+            rows.append((f"fig12/{bench}/{s}", v * 1e6, ""))
+        ratios_cf.append(vals["cflow"] / max(vals["dflow"], 1e-9))
+        ratios_ff.append(vals["faasflow"] / max(vals["dflow"], 1e-9))
+    rows.append(("fig12/avg_ratio_cflow_over_dflow", 0.0,
+                 f"{sum(ratios_cf) / len(ratios_cf):.2f}x (paper 5.6x)"))
+    rows.append(("fig12/avg_ratio_faasflow_over_dflow", 0.0,
+                 f"{sum(ratios_ff) / len(ratios_ff):.2f}x (paper 1.1x)"))
+    return rows

@@ -1,0 +1,34 @@
+"""Paper Fig. 9: 99%-ile latency, all benchmarks × all systems.
+
+Setup per §5.2: 50 MB/s bandwidth, 6 invocations/min, open loop, 60 s
+timeout recorded as 60 s.  Derived column: DFlow's p99 reduction vs the
+baseline (paper: ~52-60% vs CFlow, 28-40% vs FaaSFlow, 20-25% vs
+FaaSFlowRedis, 36-40% vs KNIX; and only CFlow-Cyc times out).
+"""
+
+from repro.core import SYSTEMS, make_workflow, run_open_loop
+
+N_INVOCATIONS = 8
+RATE = 6.0
+
+
+def run():
+    rows = []
+    p99 = {}
+    for bench in ("WC", "FP", "Cyc", "Epi", "Gen", "Soy"):
+        wf = make_workflow(bench)
+        for system in SYSTEMS:
+            r = run_open_loop(system, wf, rate_per_min=RATE,
+                              n_invocations=N_INVOCATIONS)
+            p99[(bench, system)] = r.p99
+            rows.append((f"fig9/{bench}/{system}", r.p99 * 1e6,
+                         f"timeouts={r.timeouts}"))
+    # average reductions vs DFlow
+    for base in SYSTEMS:
+        if base == "dflow":
+            continue
+        reds = [1 - p99[(b, "dflow")] / p99[(b, base)]
+                for b in ("WC", "FP", "Cyc", "Epi", "Gen", "Soy")]
+        rows.append((f"fig9/avg_reduction_vs_{base}",
+                     0.0, f"{100 * sum(reds) / len(reds):.1f}%"))
+    return rows

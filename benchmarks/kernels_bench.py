@@ -1,0 +1,47 @@
+"""Kernel micro-benchmarks (CPU: jnp reference path wall time + analytic
+FLOPs; the Pallas kernels themselves are TPU-targeted and CPU interpret
+timings would be meaningless)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd import ssd
+
+
+def _time(fn, *args, iters=3, **kw):
+    fn(*args, **kw).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+def run():
+    rows = []
+    # flash attention ref path
+    B, S, H, Hk, D = 1, 1024, 8, 2, 64
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hk, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hk, D), jnp.float32)
+    t = _time(flash_attention, q, k, v, causal=True, use_kernel=False)
+    flops = 4 * B * H * S * S * D / 2
+    rows.append(("kernels/flash_attention_ref/B1xS1024xH8xD64",
+                 t * 1e6, f"{flops / t / 1e9:.1f}GFLOP/s_cpu_ref"))
+
+    # ssd ref path
+    B, S, Hh, P, N = 1, 2048, 8, 64, 64
+    ks = jax.random.split(jax.random.key(1), 5)
+    x = jax.random.normal(ks[0], (B, S, Hh, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, Hh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (Hh,)))
+    Bm = jax.random.normal(ks[3], (B, S, N), jnp.float32)
+    Cm = jax.random.normal(ks[4], (B, S, N), jnp.float32)
+    t = _time(ssd, x, dt, A, Bm, Cm, chunk=128, use_kernel=False)
+    rows.append(("kernels/ssd_ref/B1xS2048xH8xP64xN64", t * 1e6,
+                 f"chunked_scan"))
+    return rows

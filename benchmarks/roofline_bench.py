@@ -1,0 +1,27 @@
+"""Roofline summary rows from the dry-run records (§Roofline deliverable).
+
+Reads results/dryrun/*.json if present; derived column reports the
+dominant term and the useful/bound roofline fraction."""
+
+import pathlib
+
+
+def run():
+    rows = []
+    try:
+        from repro.analysis.roofline import load_records
+    except Exception:
+        return [("roofline/unavailable", 0.0, "import failed")]
+    outdir = pathlib.Path("results/dryrun")
+    if not outdir.exists():
+        return [("roofline/no_dryrun_results", 0.0,
+                 "run: python -m repro.launch.dryrun")]
+    recs = load_records(outdir)
+    for r in recs:
+        if r["mesh"] != "single":
+            continue
+        rows.append((
+            f"roofline/{r['arch']}/{r['shape']}",
+            r["bound_s"] * 1e6,
+            f"dom={r['dominant']},frac={r['roofline_fraction']:.2f}"))
+    return rows

@@ -1,0 +1,47 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows (us_per_call = simulated latency per invocation in microseconds
+# for the workflow benchmarks, wall time for kernel micro-benchmarks).
+"""Benchmark harness entry point: ``python -m benchmarks.run [--only X]``."""
+
+import argparse
+import sys
+import time
+
+MODULES = [
+    ("fig9", "benchmarks.fig9_tail_latency"),
+    ("fig10", "benchmarks.fig10_bw_sweep"),
+    ("fig11", "benchmarks.fig11_colocation"),
+    ("fig12", "benchmarks.fig12_coldstart"),
+    ("fig13", "benchmarks.fig13_invocation"),
+    ("kernels", "benchmarks.kernels_bench"),
+    ("roofline", "benchmarks.roofline_bench"),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: fig9,fig10,...")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for key, modname in MODULES:
+        if only and key not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+            print(f"# {key} done in {time.time() - t0:.1f}s",
+                  file=sys.stderr)
+        except Exception as e:   # noqa: BLE001 - keep the harness going
+            failures += 1
+            print(f"{key}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,88 @@
+"""Quickstart: the paper's DFlow engine executing a real workflow.
+
+Builds a word-count workflow from a YAML spec, binds real Python callables
+(numpy payloads), and runs it under both invocation patterns — dataflow
+(the paper's contribution) and controlflow (the baseline) — over a
+bandwidth-limited transport.  The counts finish at staggered times, so the
+dataflow pattern lets ``merge`` pull each count the moment it is produced
+(fine-grained retrieval, §3.3.3) instead of fetching everything after the
+last precursor completes.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.core import DFlowEngine, Transport, parse_workflow
+
+VOCAB = 50_000
+SHARDS = 4
+
+YAML = f"""
+name: wordcount
+functions:
+  split:
+    inputs: [corpus]
+    outputs: [{", ".join(f"shard.{i}" for i in range(SHARDS))}]
+    exec_time: 0.05
+  count:
+    foreach: {SHARDS}
+    inputs: [shard.$i]
+    outputs: [wc.$i]
+    exec_time: 0.2
+  merge:
+    inputs: [wc.*]
+    outputs: [result]
+    exec_time: 0.05
+"""
+
+
+def split(corpus):
+    parts = np.array_split(corpus, SHARDS)
+    return {f"shard.{i}": parts[i] for i in range(SHARDS)}
+
+
+def make_count(i):
+    def count(**kw):
+        time.sleep(0.1 + 0.1 * i)     # staggered completion times
+        shard = kw[f"shard.{i}"]
+        return {f"wc.{i}": np.bincount(shard, minlength=VOCAB)
+                .astype(np.int64)}
+    return count
+
+
+def merge(**kw):
+    total = sum(kw[f"wc.{i}"] for i in range(SHARDS))
+    return {"result": total}
+
+
+def main():
+    rng = np.random.default_rng(0)
+    corpus = rng.integers(0, VOCAB, size=400_000).astype(np.int32)
+
+    fns = {"split": split, "merge": merge}
+    for i in range(SHARDS):
+        fns[f"count.{i}"] = make_count(i)
+    wf = parse_workflow(YAML, fns)
+    print(f"workflow: {len(wf)} functions, entries={wf.entry_points}")
+
+    results = {}
+    for pattern in ("dataflow", "controlflow"):
+        engine = DFlowEngine(n_nodes=3, pattern=pattern,
+                             transport=Transport(bandwidth=8e6))
+        t0 = time.time()
+        report = engine.run(wf, {"corpus": corpus})
+        wall = time.time() - t0
+        results[pattern] = report.outputs["result"]
+        print(f"{pattern:12s}: {wall * 1e3:6.1f} ms  "
+              f"({report.transfers} transfers, "
+              f"{report.bytes_moved / 1e6:.1f} MB moved)")
+    assert np.array_equal(results["dataflow"], results["controlflow"])
+    assert int(results["dataflow"].sum()) == corpus.size
+    print("identical results under both invocation patterns ✓")
+
+
+if __name__ == "__main__":
+    main()

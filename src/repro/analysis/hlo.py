@@ -1,0 +1,403 @@
+"""Optimized-HLO text analysis: collective bytes + while-loop trip counts.
+
+``compiled.as_text()`` of an SPMD-partitioned module has *per-device*
+shapes, so every byte count below is already per device.  Collectives that
+sit inside ``while`` bodies (layer scans, microbatch accumulation) must be
+multiplied by the loop trip count; we reconstruct the computation call
+graph (body=/condition=/calls=/to_apply=) and propagate multipliers, taking
+each while's trip count from the largest integer constant in its condition
+computation (XLA canonicalizes counted loops to ``iter < C``).
+
+Wire-byte model per collective (ring algorithms, n = participant count):
+
+=================  ===========================================
+all-reduce         2 · bytes · (n-1)/n
+all-gather         out_bytes · (n-1)/n       (out is the full gather)
+reduce-scatter     out_bytes · (n-1)          (out is the 1/n shard)
+all-to-all         bytes · (n-1)/n
+collective-permute bytes
+=================  ===========================================
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+
+__all__ = ["collective_summary", "count_scan_trips", "parse_collectives"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLL_RE = re.compile(
+    r"(?P<kind>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+_COMP_DEF_RE = re.compile(r"^(?:%?)([\w\.\-]+)\s*(?:\([^)]*\))?\s*"
+                          r"(?:->\s*[^{]*)?\{\s*$")
+_CALL_RE = re.compile(r"(?:to_apply|body|condition|branch_computations|"
+                      r"called_computations)=\{?%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)\}?")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,\s]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_WHILE_RE = re.compile(r"while\(")
+
+
+def _shape_bytes(dt: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))     # [groups, per_group]
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return 1
+
+
+def _result_bytes(line: str) -> int:
+    """Sum of shaped outputs on the lhs (handles tuple results)."""
+    lhs = line.split(" = ", 1)
+    target = lhs[1] if len(lhs) == 2 else line
+    # take shapes up to the op name (result portion of the line)
+    m = _COLL_RE.search(target)
+    head = target[:m.start()] if m else target
+    total = 0
+    for sm in _SHAPE_RE.finditer(head):
+        if sm.group("dt") in _DTYPE_BYTES:
+            total += _shape_bytes(sm.group("dt"), sm.group("dims"))
+    return total
+
+
+def _wire_bytes(kind: str, nbytes: int, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * nbytes * (n - 1) / n
+    if kind == "all-gather":
+        return nbytes * (n - 1) / n
+    if kind == "reduce-scatter":
+        return float(nbytes) * (n - 1)
+    if kind == "all-to-all":
+        return nbytes * (n - 1) / n
+    if kind == "collective-permute":
+        return float(nbytes)
+    return float(nbytes)
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    """computation name -> its lines (flat brace tracking)."""
+    comps: dict[str, list[str]] = {}
+    current = None
+    depth = 0
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if current is None:
+            m = re.match(r"^%?([\w\.\-]+)[^=]*\{$", stripped)
+            if stripped.endswith("{") and ("(" in stripped or
+                                           stripped.startswith("ENTRY")):
+                name = stripped.split()[0].lstrip("%")
+                if stripped.startswith("ENTRY"):
+                    name = stripped.split()[1].lstrip("%")
+                current = name
+                comps[current] = []
+                depth = 1
+            continue
+        depth += stripped.count("{") - stripped.count("}")
+        if depth <= 0:
+            current = None
+            continue
+        comps[current].append(line)
+    return comps
+
+
+def _call_edges(lines: list[str]) -> dict[str, list[str]]:
+    """op-line attributes: body= / condition= / to_apply= targets."""
+    edges = defaultdict(list)
+    for line in lines:
+        for m in re.finditer(r"(body|condition|to_apply)=%?([\w\.\-]+)",
+                             line):
+            edges[m.group(1)].append(m.group(2))
+    return edges
+
+
+def count_scan_trips(hlo: str) -> dict[str, int]:
+    """while-body computation name -> inferred trip count."""
+    comps = _split_computations(hlo)
+    trips: dict[str, int] = {}
+    for name, lines in comps.items():
+        for line in lines:
+            if "while(" not in line:
+                continue
+            bm = re.search(r"body=%?([\w\.\-]+)", line)
+            cm = re.search(r"condition=%?([\w\.\-]+)", line)
+            if not bm or not cm:
+                continue
+            cond_lines = comps.get(cm.group(1), [])
+            consts = [int(x) for cl in cond_lines
+                      for x in _CONST_RE.findall(cl)]
+            trips[bm.group(1)] = max(consts) if consts else 1
+    return trips
+
+
+def parse_collectives(hlo: str) -> list[dict]:
+    """Every collective op with its per-device wire bytes, loop-scaled."""
+    comps = _split_computations(hlo)
+    trips = count_scan_trips(hlo)
+
+    # multiplier per computation: product of enclosing loop trip counts.
+    mult: dict[str, float] = defaultdict(lambda: 1.0)
+
+    # build parent->child edges for body/to_apply/condition
+    children: dict[str, list[str]] = defaultdict(list)
+    for name, lines in comps.items():
+        for line in lines:
+            for m in re.finditer(r"(body|condition|to_apply|"
+                                 r"branch_computations)=\{?%?([\w\.\-]+)",
+                                 line):
+                kind, target = m.group(1), m.group(2)
+                children[name].append(target)
+
+    # propagate multipliers from the entry computation down.
+    entry = None
+    for name in comps:
+        if "main" in name or entry is None:
+            entry = name if entry is None else entry
+    # find ENTRY computation: the one not referenced by others
+    referenced = {t for ts in children.values() for t in ts}
+    roots = [n for n in comps if n not in referenced]
+    stack = [(r, 1.0) for r in roots]
+    seen = set()
+    while stack:
+        name, m0 = stack.pop()
+        if (name, m0) in seen:
+            continue
+        seen.add((name, m0))
+        mult[name] = max(mult[name], m0)
+        for child in children.get(name, ()):  # body gets ×trip
+            factor = trips.get(child, 1) if child in trips else 1
+            stack.append((child, m0 * factor))
+
+    out = []
+    for name, lines in comps.items():
+        for line in lines:
+            cm = _COLL_RE.search(line)
+            if not cm or " = " not in line:
+                continue
+            kind = cm.group("kind")
+            if f"{kind}-done" in line:
+                continue        # counted at -start
+            nbytes = _result_bytes(line)
+            n = _group_size(line)
+            wire = _wire_bytes(kind, nbytes, n)
+            out.append({
+                "kind": kind, "bytes": nbytes, "group": n,
+                "wire_bytes": wire * mult[name],
+                "computation": name, "multiplier": mult[name],
+            })
+    return out
+
+
+_DOT_RE = re.compile(r" = (?P<rdt>[a-z0-9]+)\[(?P<rdims>[0-9,]*)\][^=]*? "
+                     r"dot\((?P<args>.*)")
+_CONTR_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]+)\}")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+                     r"(?:\()?([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _symbol_shapes(hlo: str) -> dict[str, tuple[str, list[int]]]:
+    """%name -> (dtype, dims) from each op's defining line (first shape of
+    tuple results — sufficient for dot operands, which are arrays)."""
+    table: dict[str, tuple[str, list[int]]] = {}
+    for line in hlo.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        dt = m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(x) for x in m.group(3).split(",") if x.strip()]
+        table[m.group(1)] = (dt, dims)
+    return table
+
+
+def _computation_multipliers(hlo: str) -> dict[str, float]:
+    comps = _split_computations(hlo)
+    trips = count_scan_trips(hlo)
+    children: dict[str, list[str]] = defaultdict(list)
+    for name, lines in comps.items():
+        for line in lines:
+            for m in re.finditer(r"(body|condition|to_apply|"
+                                 r"branch_computations)=\{?%?([\w\.\-]+)",
+                                 line):
+                children[name].append(m.group(2))
+    referenced = {t for ts in children.values() for t in ts}
+    roots = [n for n in comps if n not in referenced]
+    mult: dict[str, float] = defaultdict(lambda: 1.0)
+    stack = [(r, 1.0) for r in roots]
+    seen = set()
+    while stack:
+        name, m0 = stack.pop()
+        if (name, m0) in seen:
+            continue
+        seen.add((name, m0))
+        mult[name] = max(mult[name], m0)
+        for child in children.get(name, ()):
+            factor = trips.get(child, 1) if child in trips else 1
+            stack.append((child, m0 * factor))
+    return dict(mult)
+
+
+def matmul_flops(hlo: str) -> float:
+    """Loop-scaled dot-op FLOPs per device parsed from optimized HLO.
+
+    XLA's ``cost_analysis()`` counts a while body once; layer scans and
+    blockwise-attention chunk loops therefore under-report by the trip
+    counts.  FLOPs per dot = 2 · |result| · K (K = contracted extent from
+    the lhs operand shape)."""
+    comps = _split_computations(hlo)
+    mult = _computation_multipliers(hlo)
+    symbols = _symbol_shapes(hlo)
+    total = 0.0
+    for name, lines in comps.items():
+        m0 = mult.get(name, 1.0)
+        for line in lines:
+            dm = _DOT_RE.search(line)
+            if not dm or " dot(" not in line:
+                continue
+            out_elems = 1
+            for d in dm.group("rdims").split(","):
+                if d.strip():
+                    out_elems *= int(d)
+            cm = _CONTR_RE.search(line)
+            if not cm:
+                continue
+            # lhs operand: inline shape if printed, else symbol lookup.
+            args = dm.group("args")
+            am = _SHAPE_RE.search(args.split(",")[0])
+            if am:
+                lhs_dims = [int(x) for x in am.group("dims").split(",")
+                            if x.strip()]
+            else:
+                opname = args.lstrip("(").split(",")[0].strip().lstrip("%")
+                entry = symbols.get(opname)
+                if entry is None:
+                    continue
+                lhs_dims = entry[1]
+            k = 1
+            for ci in cm.group(1).split(","):
+                idx = int(ci)
+                if idx < len(lhs_dims):
+                    k *= lhs_dims[idx]
+            total += 2.0 * out_elems * k * m0
+    return total
+
+
+_SKIP_OPS = ("parameter(", "constant(", "get-tuple-element(", "tuple(",
+             "bitcast(", "after-all(", "partition-id(", "replica-id(",
+             "iota(")
+_OPND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def hbm_bytes(hlo: str) -> float:
+    """Estimated per-device HBM traffic (bytes), loop-scaled.
+
+    Sums result bytes (writes) + operand bytes (reads) of every *top-level*
+    op; ops inside ``fused_computation`` bodies never touch HBM (only the
+    fusion's operands/results do), so fusion-body computations are skipped
+    entirely.  Aliasing pseudo-ops (bitcast/GTE/tuple/parameter) are free.
+    """
+    comps = _split_computations(hlo)
+    mult = _computation_multipliers(hlo)
+    symbols = _symbol_shapes(hlo)
+
+    # fusion bodies = computations referenced via calls= on fusion ops
+    fusion_bodies: set[str] = set()
+    for name, lines in comps.items():
+        for line in lines:
+            if " fusion(" in line:
+                for m in re.finditer(r"calls=%?([\w\.\-]+)", line):
+                    fusion_bodies.add(m.group(1))
+    # fusions whose body is an in-place windowed update (root DUS/scatter):
+    # the fusion "result" aliases the whole buffer but only a window is
+    # actually written (e.g. per-layer gradient accumulation into stacked
+    # parameter buffers inside the backward scan).
+    inplace_bodies = {
+        name for name in fusion_bodies
+        if any(("dynamic-update-slice(" in ln or " scatter(" in ln)
+               for ln in comps.get(name, ()))}
+
+    total = 0.0
+    for name, lines in comps.items():
+        if name in fusion_bodies:
+            continue
+        m0 = mult.get(name, 1.0)
+        for line in lines:
+            if " = " not in line:
+                continue
+            if any(op in line for op in _SKIP_OPS):
+                continue
+            dm = _DEF_RE.match(line)
+            if not dm or dm.group(2) not in _DTYPE_BYTES:
+                continue
+            out_b = _shape_bytes(dm.group(2), dm.group(3))
+            rhs = line.split(" = ", 1)[1]
+            if " while(" in rhs:
+                continue     # carry aliases through; body ops are counted
+            is_inplace = (" dynamic-update-slice(" in rhs
+                          or " scatter(" in rhs)
+            if not is_inplace and " fusion(" in rhs:
+                cm = re.search(r"calls=%?([\w\.\-]+)", rhs)
+                is_inplace = bool(cm) and cm.group(1) in inplace_bodies
+            if is_inplace:
+                # aliased in-place update: traffic ≈ the written window
+                # (smallest shaped operand), not the whole buffer.
+                ops = _operand_shapes(rhs, symbols)
+                small = [b for b in ops if b < out_b]
+                total += 2.0 * (min(small) if small else out_b) * m0
+                continue
+            # Write-once/read-once model: each produced tensor is written
+            # and read ~once downstream (2 × result bytes).  Operand sizes
+            # are NOT summed — XLA fuses slice/elementwise chains, so an
+            # op-line operand often names a far larger buffer than the
+            # bytes actually touched per execution.
+            total += 2.0 * out_b * m0
+    return total
+
+
+def _operand_shapes(rhs: str, symbols) -> list[int]:
+    paren = rhs.find("(")
+    close = rhs.find(")", paren)
+    out: list[int] = []
+    if paren != -1 and close != -1:
+        for om in _OPND_RE.finditer(rhs[paren:close]):
+            entry = symbols.get(om.group(1))
+            if entry:
+                out.append(_shape_bytes(entry[0],
+                                        ",".join(map(str, entry[1]))))
+    return out
+
+
+def collective_summary(hlo: str) -> dict:
+    ops = parse_collectives(hlo)
+    by_kind: dict[str, dict] = {}
+    for op in ops:
+        rec = by_kind.setdefault(op["kind"],
+                                 {"count": 0, "wire_bytes": 0.0})
+        rec["count"] += 1
+        rec["wire_bytes"] += op["wire_bytes"]
+    return {
+        "total_bytes": sum(o["wire_bytes"] for o in ops),
+        "n_ops": len(ops),
+        "by_kind": by_kind,
+    }

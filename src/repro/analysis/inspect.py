@@ -1,0 +1,104 @@
+"""Top-contributor inspector for saved dry-run HLO (hillclimb tooling).
+
+``python -m repro.analysis.inspect results/dryrun/<cell>.hlo.gz [--top 15]``
+
+Prints the largest per-device HBM-traffic and collective contributors with
+their loop multipliers and source metadata (op_name), so §Perf hypotheses
+come from measured structure instead of guesswork.
+"""
+
+from __future__ import annotations
+
+import argparse
+import gzip
+import pathlib
+import re
+from collections import defaultdict
+
+from .hlo import (_DEF_RE, _DTYPE_BYTES, _SKIP_OPS, _computation_multipliers,
+                  _operand_shapes, _shape_bytes, _split_computations,
+                  _symbol_shapes, parse_collectives)
+
+__all__ = ["top_memory_ops", "main"]
+
+_META_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def top_memory_ops(hlo: str, top: int = 20):
+    comps = _split_computations(hlo)
+    mult = _computation_multipliers(hlo)
+    symbols = _symbol_shapes(hlo)
+    fusion_bodies: set[str] = set()
+    for name, lines in comps.items():
+        for line in lines:
+            if " fusion(" in line:
+                for m in re.finditer(r"calls=%?([\w\.\-]+)", line):
+                    fusion_bodies.add(m.group(1))
+    inplace = {
+        name for name in fusion_bodies
+        if any(("dynamic-update-slice(" in ln or " scatter(" in ln)
+               for ln in comps.get(name, ()))}
+
+    rows = []
+    for name, lines in comps.items():
+        if name in fusion_bodies:
+            continue
+        m0 = mult.get(name, 1.0)
+        for line in lines:
+            if " = " not in line or any(op in line for op in _SKIP_OPS):
+                continue
+            dm = _DEF_RE.match(line)
+            if not dm or dm.group(2) not in _DTYPE_BYTES:
+                continue
+            out_b = _shape_bytes(dm.group(2), dm.group(3))
+            rhs = line.split(" = ", 1)[1]
+            if " while(" in rhs:
+                continue
+            is_inplace = (" dynamic-update-slice(" in rhs
+                          or " scatter(" in rhs)
+            if not is_inplace and " fusion(" in rhs:
+                cm = re.search(r"calls=%?([\w\.\-]+)", rhs)
+                is_inplace = bool(cm) and cm.group(1) in inplace
+            if is_inplace:
+                ops = _operand_shapes(rhs, symbols)
+                small = [b for b in ops if b < out_b]
+                bytes_ = 2.0 * (min(small) if small else out_b) * m0
+            else:
+                bytes_ = 2.0 * out_b * m0
+            meta = _META_RE.search(line)
+            shape = f"{dm.group(2)}[{dm.group(3)}]"
+            rows.append((bytes_, m0, shape,
+                         (meta.group(1) if meta else name)[:90]))
+    rows.sort(key=lambda r: -r[0])
+    return rows[:top]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args(argv)
+    p = pathlib.Path(args.path)
+    hlo = gzip.open(p, "rt").read() if p.suffix == ".gz" \
+        else p.read_text()
+
+    print("== top HBM-traffic ops (per device, loop-scaled) ==")
+    for b, m0, shape, meta in top_memory_ops(hlo, args.top):
+        print(f"{b / 1e9:9.1f} GB  x{m0:6.0f}  {shape:34s} {meta}")
+
+    print("\n== top collectives (wire bytes per device, loop-scaled) ==")
+    colls = sorted(parse_collectives(hlo), key=lambda o: -o["wire_bytes"])
+    agg = defaultdict(lambda: [0.0, 0])
+    for o in colls:
+        key = (o["kind"], o["bytes"], o["group"], o["multiplier"])
+        agg[key][0] += o["wire_bytes"]
+        agg[key][1] += 1
+    for (kind, nbytes, grp, m0), (wb, cnt) in sorted(
+            agg.items(), key=lambda kv: -kv[1][0])[:args.top]:
+        print(f"{wb / 1e9:9.1f} GB  x{m0:6.0f}  {kind:20s} "
+              f"{nbytes / 1e6:8.1f} MB/op  group={grp}  count={cnt}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,128 @@
+"""Roofline analysis over dry-run records (EXPERIMENTS.md §Roofline).
+
+Hardware model (TPU v5e, per the brief):
+  peak  = 197 TFLOP/s bf16 per chip
+  HBM   = 819 GB/s per chip
+  ICI   = ~50 GB/s per link
+
+Three terms per (arch × shape × mesh) cell, all in seconds per step:
+
+  compute    = dot_flops_per_device / peak
+  memory     = hbm_bytes_per_device / HBM_bw
+  collective = collective_wire_bytes_per_device / ICI_bw
+
+``dot_flops_per_device`` comes from the loop-scaled HLO parse (XLA's
+cost_analysis counts while bodies once — see analysis/hlo.py); HBM bytes
+scale cost_analysis's "bytes accessed" by the same loop-correction ratio
+(both are dominated by the loop bodies; the approximation is noted in the
+report).  The dominant term is the bottleneck; the roofline fraction we
+report for §Perf is
+
+  useful = (MODEL_FLOPS / chips / peak) / max(terms)
+
+i.e. how much of the bound time is spent on *useful* model FLOPs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import pathlib
+
+__all__ = ["PEAK_FLOPS", "HBM_BW", "ICI_BW", "analyze_record",
+           "load_records", "table", "main"]
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link
+HBM_PER_CHIP = 16 * (1 << 30)
+
+
+def analyze_record(rec: dict) -> dict:
+    chips = rec["n_chips"]
+    dot = rec.get("dot_flops_per_device") or 0.0
+    raw_flops = rec.get("hlo_flops") or 0.0
+    raw_bytes = rec.get("hlo_bytes") or 0.0
+    hbm_bytes = rec.get("hbm_bytes_per_device")
+    if not hbm_bytes:
+        # fallback for old records: loop-correct cost_analysis bytes
+        corr = (dot / raw_flops) if raw_flops else 1.0
+        hbm_bytes = raw_bytes * max(corr, 1.0)
+    coll = rec["collectives"]["total_bytes"]
+
+    compute_s = dot / PEAK_FLOPS
+    memory_s = hbm_bytes / HBM_BW
+    collective_s = coll / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+
+    mf = rec["model_flops"]["model_flops"]
+    useful_s = mf / chips / PEAK_FLOPS
+    frac = useful_s / bound if bound > 0 else float("nan")
+    flops_ratio = mf / (dot * chips) if dot else float("nan")
+
+    temp = (rec.get("memory_analysis") or {}).get("temp_size_bytes")
+    args_b = (rec.get("memory_analysis") or {}).get("argument_size_bytes")
+    return {
+        **{k: rec[k] for k in ("arch", "shape", "mesh", "kind", "n_chips")},
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dominant,
+        "bound_s": bound, "useful_s": useful_s,
+        "roofline_fraction": frac,
+        "model_over_hlo_flops": flops_ratio,
+        "hbm_gb_per_chip": ((temp or 0) + (args_b or 0)) / (1 << 30),
+        "tag": rec.get("tag", "baseline"),
+    }
+
+
+def load_records(directory: str | pathlib.Path, tag: str = "baseline"):
+    recs = []
+    for p in sorted(pathlib.Path(directory).glob(f"*__{tag}.json")):
+        rec = json.loads(p.read_text())
+        rec["tag"] = tag
+        recs.append(analyze_record(rec))
+    return recs
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:7.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:6.1f}ms"
+    return f"{x * 1e6:6.0f}us"
+
+
+def table(rows: list[dict], mesh: str = "single") -> str:
+    out = ["| arch | shape | compute | memory | collective | bottleneck | "
+           "useful/bound | MODEL/HLO |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_s(r['compute_s'])} | "
+            f"{_fmt_s(r['memory_s'])} | {_fmt_s(r['collective_s'])} | "
+            f"**{r['dominant']}** | {r['roofline_fraction']:.2f} | "
+            f"{r['model_over_hlo_flops']:.2f} |")
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="indir", default="results/dryrun")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+    rows = load_records(args.indir, args.tag)
+    print(table(rows, args.mesh))
+    if args.json_out:
+        pathlib.Path(args.json_out).write_text(json.dumps(rows, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,6 @@
+"""Checkpointing: topology-agnostic save/restore with async writes."""
+
+from .ckpt import (CheckpointManager, latest_step, restore_state,
+                   save_state)
+
+__all__ = ["CheckpointManager", "latest_step", "restore_state", "save_state"]

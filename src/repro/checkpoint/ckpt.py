@@ -1,0 +1,179 @@
+"""Topology-agnostic checkpoint save/restore (+ async saves).
+
+Layout: one directory per step, one ``.npy`` per pytree leaf (path-encoded
+file names) plus a ``manifest.json`` (tree structure, dtypes, step, config
+fingerprint).  Leaves are written as *full* (unsharded) arrays keyed by
+their tree path — never by device — so a checkpoint written on a 16×16 mesh
+restores onto any other mesh or host count (elastic re-scaling): the
+restore path simply ``device_put``s each leaf with the *new* mesh's
+NamedSharding.
+
+Async mode snapshots leaves to host memory synchronously (cheap) and writes
+files on a daemon thread — the training loop continues immediately; this is
+the paper's "producer frees its container at Put, metadata publish is
+asynchronous" pattern applied to checkpoint I/O (DESIGN.md §3).
+
+Fault tolerance contract (used by launch/train.py): crash at any point
+leaves either a complete previous checkpoint or a complete new one —
+directories are written under a temp name and atomically renamed; restarts
+resume from ``latest_step`` and the data pipeline reproduces the exact
+batch for that step (seeded by step index).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["save_state", "restore_state", "latest_step",
+           "CheckpointManager"]
+
+_SEP = "__"
+
+
+def _flatten(tree) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_fmt(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _fmt(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_state(directory: str | pathlib.Path, step: int, state,
+               extra: dict | None = None) -> pathlib.Path:
+    """Synchronous atomic save; returns the final directory."""
+    directory = pathlib.Path(directory)
+    final = directory / f"step_{step:08d}"
+    tmp = directory / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    flat = _flatten(state)
+    manifest = {"step": step, "leaves": {}, "extra": extra or {}}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        true_dtype = str(arr.dtype)
+        if arr.dtype.kind == "V" or "bfloat16" in true_dtype:
+            # ml_dtypes (bfloat16 etc.) don't round-trip through .npy:
+            # store the raw bits and record the logical dtype.
+            arr = arr.view(np.uint16 if arr.dtype.itemsize == 2
+                           else np.uint8)
+        np.save(tmp / f"{key}.npy", arr)
+        manifest["leaves"][key] = {"dtype": true_dtype,
+                                   "shape": list(arr.shape)}
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    return final
+
+
+def latest_step(directory: str | pathlib.Path) -> int | None:
+    directory = pathlib.Path(directory)
+    if not directory.exists():
+        return None
+    steps = [int(m.group(1)) for p in directory.iterdir()
+             if (m := re.match(r"step_(\d+)$", p.name))]
+    return max(steps) if steps else None
+
+
+def restore_state(directory: str | pathlib.Path, step: int, like,
+                  shardings=None):
+    """Restore into the structure of ``like``; reshard onto ``shardings``
+    (a matching tree of NamedSharding) when given — elastic restore."""
+    directory = pathlib.Path(directory) / f"step_{step:08d}"
+    manifest = json.loads((directory / "manifest.json").read_text())
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    shard_leaves = (jax.tree.leaves(
+        shardings, is_leaf=lambda x: hasattr(x, "spec"))
+        if shardings is not None else [None] * len(flat_like))
+    out = []
+    for (path, leaf), sh in zip(flat_like, shard_leaves):
+        key = _SEP.join(_fmt(p) for p in path)
+        if key not in manifest["leaves"]:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = np.load(directory / f"{key}.npy")
+        stored = manifest["leaves"][key]["dtype"]
+        if "bfloat16" in stored and arr.dtype == np.uint16:
+            import ml_dtypes
+
+            arr = arr.view(ml_dtypes.bfloat16)
+        want = jax.numpy.dtype(leaf.dtype) if hasattr(leaf, "dtype") else None
+        if want is not None and arr.dtype != want:
+            arr = arr.astype(want)
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_structure(
+        jax.tree.map(lambda x: 0, like)).unflatten(out)
+
+
+class CheckpointManager:
+    """Keeps the last ``keep`` checkpoints; optional async saves."""
+
+    def __init__(self, directory: str | pathlib.Path, keep: int = 3,
+                 async_save: bool = True):
+        self.directory = pathlib.Path(directory)
+        self.keep = keep
+        self.async_save = async_save
+        self._pending: threading.Thread | None = None
+        self._lock = threading.Lock()
+
+    def save(self, step: int, state, extra: dict | None = None) -> None:
+        if self.async_save:
+            # Snapshot to host synchronously, write on a worker thread.
+            host_state = jax.tree.map(
+                lambda x: np.asarray(jax.device_get(x)), state)
+            self.wait()
+            self._pending = threading.Thread(
+                target=self._write, args=(step, host_state, extra),
+                daemon=True)
+            self._pending.start()
+        else:
+            self._write(step, state, extra)
+
+    def _write(self, step, state, extra):
+        with self._lock:
+            save_state(self.directory, step, state, extra)
+            self._gc()
+
+    def _gc(self):
+        steps = sorted(
+            int(m.group(1)) for p in self.directory.iterdir()
+            if (m := re.match(r"step_(\d+)$", p.name)))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.directory / f"step_{s:08d}",
+                          ignore_errors=True)
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def latest(self) -> int | None:
+        self.wait()
+        return latest_step(self.directory)
+
+    def restore(self, like, step: int | None = None, shardings=None):
+        step = step if step is not None else self.latest()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        return restore_state(self.directory, step, like, shardings), step

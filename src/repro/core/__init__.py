@@ -1,0 +1,36 @@
+"""DFlow core — the paper's contribution (dataflow workflow execution).
+
+Layers:
+
+* :mod:`repro.core.dag`          — workflow DAG model + parser.
+* :mod:`repro.core.partition`    — Global-Scheduler DAG partitioning.
+* :mod:`repro.core.dstore`       — real threaded DStore (Table 1 API).
+* :mod:`repro.core.dscheduler`   — real threaded DScheduler + engine.
+* :mod:`repro.core.sim*`         — deterministic cluster simulator used by
+  every paper-figure experiment (CFlow/FaaSFlow/.../KNIX baselines).
+* :mod:`repro.core.workloads`    — paper benchmarks (WC/FP/Cyc/Epi/Gen/Soy).
+* :mod:`repro.core.experiments`  — open/closed-loop drivers + metrics.
+"""
+
+from .dag import FunctionSpec, Workflow, parse_workflow
+from .dscheduler import (DFlowEngine, GlobalScheduler,
+                         dataflow_initial_frontier, dataflow_next_frontier)
+from .dstore import DStore, DataDirectoryService, LocalStore, Transport
+from .experiments import (ExperimentResult, cold_start_latency,
+                          percentile, run_closed_loop, run_open_loop)
+from .partition import cut_bytes, partition_workflow
+from .sim_systems import SYSTEMS, make_system
+from .simcluster import SimConfig
+from .workloads import BENCHMARKS, make_workflow
+
+__all__ = [
+    "FunctionSpec", "Workflow", "parse_workflow",
+    "DFlowEngine", "GlobalScheduler",
+    "dataflow_initial_frontier", "dataflow_next_frontier",
+    "DStore", "DataDirectoryService", "LocalStore", "Transport",
+    "ExperimentResult", "cold_start_latency", "percentile",
+    "run_closed_loop", "run_open_loop",
+    "cut_bytes", "partition_workflow",
+    "SYSTEMS", "make_system", "SimConfig",
+    "BENCHMARKS", "make_workflow",
+]

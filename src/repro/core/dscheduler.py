@@ -1,0 +1,277 @@
+"""DScheduler — real (threaded) two-tier scheduler executing callables.
+
+The executable twin of the simulator's scheduling logic (§3.2):
+
+* :class:`GlobalScheduler` — partitions the workflow onto nodes (same
+  locality-first GS as the simulator / FaaSFlow) and pushes metadata
+  (entry points, successor lists, placements) to the local schedulers.
+* :class:`DataflowLocalScheduler` — paper Algorithm 1.  Each launched
+  function runs in its own thread, immediately calls ``Get`` for every
+  input (fine-grained retrieval: one blocking fetch per input), executes
+  when the data arrives, and ``Put``s its outputs, which wakes downstream
+  blocked fetches.  Execution is therefore out-of-order and overlap-rich.
+* :class:`ControlflowLocalScheduler` — the FaaSFlow-style baseline: a
+  function launches only once **all** its precursors completed.
+
+Beyond-paper (documented in DESIGN.md §7): duplicate-issue straggler
+mitigation (first-writer-wins is safe because DStore data is immutable) and
+incremental fault recovery (only functions whose outputs were lost re-run;
+the paper's §3.3.5 restarts the whole workflow).
+"""
+
+from __future__ import annotations
+
+import threading
+import traceback
+from dataclasses import dataclass, field
+from typing import Any, Callable, Mapping
+
+from .dag import Workflow
+from .dstore import DStore, Transport
+from .partition import partition_workflow
+
+__all__ = ["GlobalScheduler", "DFlowEngine", "RunReport",
+           "dataflow_initial_frontier", "dataflow_next_frontier"]
+
+
+def dataflow_initial_frontier(wf: Workflow) -> list[str]:
+    """Algorithm 1 lines 1-7: entry points + their direct successors."""
+    out: list[str] = []
+    for e in wf.entry_points:
+        out.append(e)
+        out.extend(wf.successors[e])
+    return list(dict.fromkeys(out))
+
+
+def dataflow_next_frontier(wf: Workflow, finished: str) -> list[str]:
+    """Algorithm 1 lines 8-15: successors of the finished fn's successors."""
+    out: list[str] = []
+    for s in wf.successors[finished]:
+        out.extend(wf.successors[s])
+    return list(dict.fromkeys(out))
+
+
+@dataclass
+class RunReport:
+    outputs: dict[str, Any]
+    wall_time: float
+    per_function: dict[str, float] = field(default_factory=dict)
+    transfers: int = 0
+    bytes_moved: int = 0
+    reexecuted: list[str] = field(default_factory=list)
+    duplicates_won: list[str] = field(default_factory=list)
+
+
+class GlobalScheduler:
+    """Partition + metadata push (paper §3.2)."""
+
+    def __init__(self, nodes: list[str]):
+        self.nodes = list(nodes)
+
+    def assign(self, wf: Workflow) -> dict[str, str]:
+        return partition_workflow(wf, self.nodes)
+
+
+class _InstanceState:
+    def __init__(self, wf: Workflow):
+        self.lock = threading.Lock()
+        self.launched: set[str] = set()
+        self.completed: dict[str, float] = {}
+        self.failed: dict[str, BaseException] = {}
+        self.all_done = threading.Event()
+        self.wf = wf
+
+    def mark_done(self, fname: str, t: float) -> None:
+        with self.lock:
+            self.completed[fname] = t
+            if len(self.completed) == len(self.wf.functions):
+                self.all_done.set()
+
+    def mark_failed(self, fname: str, exc: BaseException) -> None:
+        with self.lock:
+            self.failed[fname] = exc
+            self.all_done.set()
+
+
+class DFlowEngine:
+    """Execute a Workflow of real callables with dataflow invocation.
+
+    ``pattern`` ∈ {"dataflow", "controlflow"} — the §5.5 ablation in real
+    (threaded) form.  ``transport`` may carry a bandwidth to make network
+    time observable.  ``straggler_factor`` (beyond-paper): when a launched
+    function has run longer than factor × its spec exec_time, a duplicate
+    is issued on another node; DStore immutability makes the race benign.
+    """
+
+    def __init__(self, n_nodes: int = 2, *, pattern: str = "dataflow",
+                 transport: Transport | None = None,
+                 get_timeout: float = 120.0,
+                 straggler_factor: float | None = None):
+        if pattern not in ("dataflow", "controlflow"):
+            raise ValueError(pattern)
+        self.nodes = [f"node{i}" for i in range(n_nodes)]
+        self.gs = GlobalScheduler(self.nodes)
+        self.pattern = pattern
+        self.transport = transport or Transport()
+        self.get_timeout = get_timeout
+        self.straggler_factor = straggler_factor
+
+    # ------------------------------------------------------------------
+    def run(self, wf: Workflow, inputs: Mapping[str, Any] | None = None,
+            *, inject_failure: str | None = None) -> RunReport:
+        """Execute one workflow instance; returns exit-function outputs.
+
+        ``inject_failure``: name of a node that "crashes" right after the
+        first function on it completes — exercises incremental recovery.
+        """
+        import time as _time
+
+        placement = self.gs.assign(wf)
+        store = DStore(self.nodes, self.transport)
+        state = _InstanceState(wf)
+        t0 = _time.monotonic()
+        report = RunReport(outputs={}, wall_time=0.0)
+        failure_armed = threading.Event()
+        if inject_failure:
+            failure_armed.set()
+
+        for k, v in (inputs or {}).items():
+            # Stage external inputs on the node of each first consumer.
+            consumers = [f.name for f in wf.functions.values()
+                         if k in f.inputs]
+            node = placement[consumers[0]] if consumers else self.nodes[0]
+            store.put(node, k, v)
+
+        def execute(fname: str, node: str, *, duplicate: bool = False):
+            f = wf.functions[fname]
+            try:
+                kwargs = {k: store.get(node, k, timeout=self.get_timeout)
+                          for k in f.inputs}
+                result = f.fn(**kwargs) if f.fn else {}
+                if not isinstance(result, Mapping):
+                    raise TypeError(
+                        f"{fname} must return a mapping of outputs")
+                missing = set(f.outputs) - set(result)
+                if missing:
+                    raise KeyError(f"{fname} missing outputs {missing}")
+                with state.lock:
+                    first = fname not in state.completed
+                for k in f.outputs:
+                    store.put(node, k, result[k])
+                if duplicate and first:
+                    report.duplicates_won.append(fname)
+                if not first:
+                    return
+                state.mark_done(fname, _time.monotonic() - t0)
+                # -- optional fault injection: node dies after its first
+                # completion; lost outputs trigger incremental re-execution.
+                if (inject_failure == node and failure_armed.is_set()):
+                    failure_armed.clear()
+                    lost = store.fail_node(node)
+                    self._recover(wf, placement, store, state, lost,
+                                  report, on_complete)
+                on_complete(fname)
+            except BaseException as exc:   # noqa: BLE001 - report upward
+                state.mark_failed(fname, exc)
+
+        def launch(fname: str):
+            with state.lock:
+                if fname in state.launched:
+                    return
+                state.launched.add(fname)
+            node = placement[fname]
+            th = threading.Thread(target=execute, args=(fname, node),
+                                  daemon=True, name=f"dflow-{fname}")
+            th.start()
+            if self.straggler_factor and wf.functions[fname].exec_time:
+                budget = self.straggler_factor * wf.functions[fname].exec_time
+
+                def watchdog():
+                    th.join(budget)
+                    with state.lock:
+                        done = fname in state.completed
+                    if not done and not state.failed:
+                        alt = next(n for n in self.nodes if n != node)
+                        threading.Thread(
+                            target=execute, args=(fname, alt),
+                            kwargs={"duplicate": True}, daemon=True).start()
+                threading.Thread(target=watchdog, daemon=True).start()
+
+        def on_complete(fname: str):
+            if self.pattern == "dataflow":
+                for t in dataflow_next_frontier(wf, fname):
+                    launch(t)
+            else:
+                for s in wf.successors[fname]:
+                    with state.lock:
+                        ready = all(p in state.completed
+                                    for p in wf.predecessors[s])
+                    if ready:
+                        launch(s)
+
+        if self.pattern == "dataflow":
+            for fname in dataflow_initial_frontier(wf):
+                launch(fname)
+        else:
+            for fname in wf.entry_points:
+                launch(fname)
+
+        state.all_done.wait(timeout=self.get_timeout * 2)
+        if state.failed:
+            fname, exc = next(iter(state.failed.items()))
+            raise RuntimeError(f"function {fname!r} failed") from exc
+        if not state.all_done.is_set():
+            raise TimeoutError("workflow did not complete")
+
+        report.wall_time = _time.monotonic() - t0
+        report.per_function = dict(state.completed)
+        report.transfers = self.transport.transfers
+        report.bytes_moved = self.transport.bytes_moved
+        # Gather every *sink* datum (produced but never consumed) — exit
+        # functions' outputs plus by-products like metrics/final state.
+        consumed = {k for f in wf.functions.values() for k in f.inputs}
+        for f in wf.functions.values():
+            for k in f.outputs:
+                if k not in consumed or f.name in wf.exit_points:
+                    report.outputs[k] = store.get(self.nodes[0], k,
+                                                  timeout=self.get_timeout)
+        return report
+
+    # -- beyond-paper incremental recovery --------------------------------
+    def _recover(self, wf: Workflow, placement: dict[str, str],
+                 store: DStore, state: _InstanceState, lost_keys: list[str],
+                 report: RunReport, on_complete) -> None:
+        """Re-execute only producers of lost keys (paper §3.3.5 restarts the
+        whole workflow; we re-run the minimal affected subgraph)."""
+        lost_fns = {wf.producer[k] for k in lost_keys if k in wf.producer}
+        if not lost_fns:
+            return
+        survivors = [n for n in self.nodes]
+        for fname in sorted(lost_fns):
+            with state.lock:
+                state.completed.pop(fname, None)
+                state.launched.discard(fname)
+            # move to a surviving node (round-robin by hash for determinism)
+            placement[fname] = survivors[hash(fname) % len(survivors)]
+            report.reexecuted.append(fname)
+        for fname in sorted(lost_fns):
+            with state.lock:
+                if fname in state.launched:
+                    continue
+                state.launched.add(fname)
+            node = placement[fname]
+            f = wf.functions[fname]
+
+            def rerun(fname=fname, node=node, f=f):
+                try:
+                    kwargs = {k: store.get(node, k, timeout=self.get_timeout)
+                              for k in f.inputs}
+                    result = f.fn(**kwargs) if f.fn else {}
+                    for k in f.outputs:
+                        store.put(node, k, result[k])
+                    import time as _t
+                    state.mark_done(fname, _t.monotonic())
+                    on_complete(fname)
+                except BaseException as exc:  # noqa: BLE001
+                    state.mark_failed(fname, exc)
+            threading.Thread(target=rerun, daemon=True).start()

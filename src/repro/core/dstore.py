@@ -1,0 +1,218 @@
+"""DStore — the paper's distributed in-memory KV store (real, threaded).
+
+This is the executable twin of the simulator's :class:`DStorePlane`: the same
+design (§3.3) implemented with real threads so the orchestrator can run
+actual Python/JAX callables as DFlow workflows:
+
+* **data directory service** (:class:`DataDirectoryService`) — metadata only:
+  key → (size, replica locations, per-replica access frequency).  Writing a
+  metadata record wakes every consumer blocked on that key (the *auto
+  blocking / waking-up* mechanism, §3.3.2).
+* **local store** per node (:class:`LocalStore`) — the bytes.
+* **Get/Put** core API (Table 1): ``Get`` blocks until the key's metadata
+  exists, then pulls the value — locally when the replica is co-resident,
+  otherwise *receiver-driven* from the least-access-frequency replica
+  (§3.3.1, §3.3.4), registering the new replica in the directory afterwards.
+* Data is **immutable**: a key can only be put once ("the updated version
+  must be stored ... with a new, unique identifier", §3.3) — which is also
+  what makes duplicate/straggler re-execution safe (first-writer-wins).
+
+A pluggable :class:`Transport` lets tests emulate a slow network (bytes/s)
+so the out-of-order overlap is observable in wall-clock time.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+__all__ = ["DataDirectoryService", "LocalStore", "DStore", "Transport",
+           "GetTimeout"]
+
+
+class GetTimeout(TimeoutError):
+    """Raised when Get blocks longer than the configured timeout."""
+
+
+def _sizeof(value: Any) -> int:
+    try:
+        import numpy as np
+
+        if hasattr(value, "nbytes"):
+            return int(value.nbytes)
+        if isinstance(value, (bytes, bytearray)):
+            return len(value)
+        if isinstance(value, np.ndarray):
+            return int(value.nbytes)
+    except Exception:  # pragma: no cover - best effort sizing
+        pass
+    return 64  # opaque object: metadata-only size
+
+
+@dataclass
+class _Meta:
+    key: str
+    size: int
+    locations: dict[str, int] = field(default_factory=dict)
+
+
+class DataDirectoryService:
+    """Thread-safe metadata directory with blocking lookups."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._meta: dict[str, _Meta] = {}
+
+    def publish(self, key: str, size: int, node: str) -> None:
+        with self._cv:
+            m = self._meta.get(key)
+            if m is None:
+                m = self._meta[key] = _Meta(key, size)
+            m.locations.setdefault(node, 0)
+            self._cv.notify_all()          # wake blocked Gets (§3.3.2)
+
+    def wait(self, key: str, timeout: float | None = None) -> _Meta:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while key not in self._meta:
+                remaining = None
+                if deadline is not None:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        raise GetTimeout(f"Get({key!r}) timed out")
+                self._cv.wait(remaining)
+            return self._meta[key]
+
+    def peek(self, key: str) -> _Meta | None:
+        with self._lock:
+            return self._meta.get(key)
+
+    def choose_replica(self, key: str) -> str:
+        """Least-access-frequency replica; increments its counter."""
+        with self._lock:
+            m = self._meta[key]
+            node = min(m.locations.items(), key=lambda kv: (kv[1], kv[0]))[0]
+            m.locations[node] += 1
+            return node
+
+    def release_replica(self, key: str, node: str) -> None:
+        with self._lock:
+            m = self._meta.get(key)
+            if m and node in m.locations and m.locations[node] > 0:
+                m.locations[node] -= 1
+
+    def keys(self) -> list[str]:
+        with self._lock:
+            return list(self._meta)
+
+    def drop(self, keys: list[str]) -> None:
+        """Fault handling (§3.3.5): delete metadata of a failed workflow."""
+        with self._cv:
+            for k in keys:
+                self._meta.pop(k, None)
+
+    def drop_node(self, node: str) -> list[str]:
+        """Remove every replica hosted on a failed node; returns keys that
+        lost their last replica (those must be recomputed)."""
+        lost: list[str] = []
+        with self._cv:
+            for k, m in list(self._meta.items()):
+                m.locations.pop(node, None)
+                if not m.locations:
+                    del self._meta[k]
+                    lost.append(k)
+        return lost
+
+
+class LocalStore:
+    """Per-node in-memory object store."""
+
+    def __init__(self, node: str):
+        self.node = node
+        self._lock = threading.Lock()
+        self._data: dict[str, Any] = {}
+
+    def write(self, key: str, value: Any) -> None:
+        with self._lock:
+            self._data[key] = value
+
+    def read(self, key: str) -> Any:
+        with self._lock:
+            return self._data[key]
+
+    def has(self, key: str) -> bool:
+        with self._lock:
+            return key in self._data
+
+    def drop_all(self) -> None:
+        with self._lock:
+            self._data.clear()
+
+
+class Transport:
+    """Inter-node copy model: optional bandwidth (B/s) + per-op latency."""
+
+    def __init__(self, bandwidth: float | None = None, latency: float = 0.0):
+        self.bandwidth = bandwidth
+        self.latency = latency
+        self._lock = threading.Lock()
+        self.bytes_moved = 0
+        self.transfers = 0
+
+    def move(self, size: int) -> None:
+        if self.latency:
+            time.sleep(self.latency)
+        if self.bandwidth:
+            time.sleep(size / self.bandwidth)
+        with self._lock:
+            self.bytes_moved += size
+            self.transfers += 1
+
+
+class DStore:
+    """Cluster-wide store: one directory + one LocalStore per node."""
+
+    def __init__(self, nodes: list[str],
+                 transport: Transport | None = None):
+        self.directory = DataDirectoryService()
+        self.stores = {n: LocalStore(n) for n in nodes}
+        self.transport = transport or Transport()
+
+    # -- Table 1 core API ------------------------------------------------
+    def put(self, node: str, key: str, value: Any) -> None:
+        """Create data with the given key (immutable; §3.3)."""
+        store = self.stores[node]
+        if self.directory.peek(key) is not None and store.has(key):
+            return                      # duplicate write: first-writer-wins
+        store.write(key, value)
+        # Metadata publish is what wakes consumers; in the real system it is
+        # asynchronous w.r.t. the producer container, here it is just cheap.
+        self.directory.publish(key, _sizeof(value), node)
+
+    def get(self, node: str, key: str,
+            timeout: float | None = None) -> Any:
+        """Blocking Get (Table 1): may wait for the producer (§3.3.2)."""
+        store = self.stores[node]
+        if store.has(key):
+            return store.read(key)
+        meta = self.directory.wait(key, timeout)
+        if store.has(key):
+            return store.read(key)
+        src = self.directory.choose_replica(key)
+        try:
+            value = self.stores[src].read(key)
+            self.transport.move(meta.size)     # receiver-driven pull
+        finally:
+            self.directory.release_replica(key, src)
+        store.write(key, value)
+        self.directory.publish(key, meta.size, node)   # new replica
+        return value
+
+    # -- fault handling ----------------------------------------------------
+    def fail_node(self, node: str) -> list[str]:
+        """Simulate a node loss; returns data keys that must be recomputed."""
+        self.stores[node].drop_all()
+        return self.directory.drop_node(node)

@@ -1,0 +1,257 @@
+"""Simulated data planes: DStore and the baseline stores (paper §3.3, §5).
+
+Every plane implements the same three-call protocol, namespaced per workflow
+instance so concurrent invocations never collide (DStore data is immutable —
+"updated data must be stored with a new unique identifier", §3.3):
+
+* ``seed(node, key, size)``      — stage an external workflow input.
+* ``put(node, key, size, consumers)``  — producer stores one output.
+  Returns an Event for *producer-side completion* (when the producer's
+  container may be released).
+* ``get(node, key)``             — consumer obtains the bytes into its
+  container on ``node``.  Returns an Event triggered when the copy is done.
+
+Planes:
+
+* :class:`DStorePlane`   — the paper's DStore: per-node local stores, a
+  metadata-only data directory service with **auto blocking/waking-up**,
+  **receiver-driven** node-to-node transfers, and **least-access-frequency
+  replica selection**.  ``put`` is local (the producer frees its container
+  immediately, §3.4) and the metadata publish is asynchronous.
+* :class:`CentralPlane`  — CFlow: every byte goes through a store on the
+  master (CouchDB by default) — both puts and gets traverse the master's
+  links, which is exactly the contention bottleneck the paper measures.
+* :class:`HybridPlane`   — FaaSFlow / FaaSFlowRedis / KNIX: local Redis for
+  intra-node exchange + a central store (CouchDB or Redis) on the master for
+  inter-node exchange.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable
+
+from .sim import Env, Event, all_of
+from .simcluster import MASTER, Cluster, SimConfig
+
+__all__ = ["DStorePlane", "CentralPlane", "HybridPlane", "DataMeta"]
+
+
+@dataclass
+class DataMeta:
+    """Directory-service record (paper §3.3.1)."""
+
+    key: str
+    size: float
+    locations: dict[str, int] = field(default_factory=dict)  # node -> access freq
+
+    def best_location(self) -> str:
+        # Receiver-driven replica choice: lowest access frequency (§3.3.1).
+        return min(self.locations.items(), key=lambda kv: (kv[1], kv[0]))[0]
+
+
+class DStorePlane:
+    """The paper's DStore over the simulated cluster."""
+
+    name = "dstore"
+
+    def __init__(self, env: Env, cluster: Cluster):
+        self.env = env
+        self.cluster = cluster
+        self.cfg = cluster.cfg
+        self.meta: dict[str, DataMeta] = {}
+        self._waiters: dict[str, list[Event]] = {}
+        self.local: dict[str, set[str]] = {n: set() for n in cluster.nodes}
+        self.sizes: dict[str, float] = {}   # producer-side truth (local hits
+        # may race the async 150us metadata publish; the local store knows
+        # its own object sizes without consulting the directory)
+        self.fetched_bytes = 0.0
+
+    # -- helpers ---------------------------------------------------------
+    def _publish(self, key: str, size: float, node: str) -> None:
+        """Async metadata write (≈150 us) then wake blocked consumers."""
+        def write(_):
+            m = self.meta.get(key)
+            if m is None:
+                m = self.meta[key] = DataMeta(key, size)
+            m.locations.setdefault(node, 0)
+            for ev in self._waiters.pop(key, []):
+                ev.trigger(m)
+        self.env._at(self.env.now + self.cfg.meta_write, write)
+
+    def seed(self, node: str, key: str, size: float) -> None:
+        self.local[node].add(key)
+        self.sizes[key] = size
+        m = self.meta.setdefault(key, DataMeta(key, size))
+        m.locations.setdefault(node, 0)
+
+    # -- producer ----------------------------------------------------------
+    def put(self, node: str, key: str, size: float,
+            consumers: Iterable[str] = (),
+            ref_node: str | None = None) -> Event:
+        done = self.env.event()
+        self.sizes[key] = size
+
+        def copied(_):
+            self.local[node].add(key)
+            self._publish(key, size, node)   # async: does not block producer
+            done.trigger(None)
+        self.cluster.local_copy(size).add_waiter(copied)
+        return done
+
+    # -- consumer ----------------------------------------------------------
+    def get(self, node: str, key: str) -> Event:
+        return self.env.process(self._get(node, key))
+
+    def _get(self, node: str, key: str):
+        cfg = self.cfg
+        # 1. local-store hit: just copy into the container (paper step 5B/6C).
+        if key in self.local[node]:
+            size = self.sizes[key]
+            yield self.cluster.local_copy(size)
+            return size
+        # 2. query directory service on the master (round trip + service).
+        yield self.env.timeout(cfg.msg_latency + cfg.meta_query)
+        m = self.meta.get(key)
+        if m is None:
+            # 3. auto-block until the producer publishes (paper §3.3.2).
+            ev = self.env.event()
+            self._waiters.setdefault(key, []).append(ev)
+            m = yield ev
+        if key not in self.local[node]:
+            # 4. receiver-driven pull from least-loaded replica (§3.3.4).
+            src = m.best_location()
+            m.locations[src] += 1
+            yield self.cluster.network.transfer(src, node, m.size,
+                                                tag=f"dstore:{key}")
+            m.locations[src] -= 1
+            self.fetched_bytes += m.size
+            self.local[node].add(key)
+            m.locations.setdefault(node, 0)   # new replica registered
+        # 5. local store -> container copy.
+        yield self.cluster.local_copy(m.size)
+        return m.size
+
+
+class CentralPlane:
+    """All data through one store on the master node (CFlow's CouchDB)."""
+
+    def __init__(self, env: Env, cluster: Cluster,
+                 op_overhead: float | None = None,
+                 bw_eff: float | None = None, name: str = "couch",
+                 hub: str = MASTER):
+        cfg = cluster.cfg
+        self.env = env
+        self.cluster = cluster
+        self.cfg = cfg
+        self.op = cfg.couch_op if op_overhead is None else op_overhead
+        self.bw_eff = cfg.couch_bw_eff if bw_eff is None else bw_eff
+        self.name = name
+        self.hub = hub
+        self.sizes: dict[str, float] = {}
+        self.seeded: set[str] = set()
+
+    def seed(self, node: str, key: str, size: float) -> None:
+        # External inputs arrive with the trigger payload — no store hop.
+        self.sizes[key] = size
+        self.seeded.add(key)
+
+    def put(self, node: str, key: str, size: float,
+            consumers: Iterable[str] = (),
+            ref_node: str | None = None) -> Event:
+        self.sizes[key] = size
+        return self.env.process(self._put(node, key, size))
+
+    def _put(self, node: str, key: str, size: float):
+        yield self.env.timeout(self.op)
+        yield self.cluster.network.transfer(node, self.hub, size / self.bw_eff,
+                                            tag=f"{self.name}:put:{key}")
+
+    def get(self, node: str, key: str) -> Event:
+        return self.env.process(self._get(node, key))
+
+    def _get(self, node: str, key: str):
+        size = self.sizes[key]
+        if key in self.seeded:
+            yield self.cluster.local_copy(size)
+            return size
+        yield self.env.timeout(self.op)
+        yield self.cluster.network.transfer(self.hub, node, size / self.bw_eff,
+                                            tag=f"{self.name}:get:{key}")
+        yield self.cluster.local_copy(size)
+        return size
+
+
+class HybridPlane:
+    """Local Redis per node + central store for inter-node (FaaSFlow family).
+
+    ``central='couch'`` → FaaSFlow;  ``central='redis'`` → FaaSFlowRedis/KNIX.
+    The producer uploads to the central store *only* when at least one
+    consumer lives on another node (FaaSFlow's GS decides storage type per
+    function; our partitioner gives the plane the consumer placement).
+    """
+
+    def __init__(self, env: Env, cluster: Cluster, central: str = "couch",
+                 hub: str = MASTER, db_exclusive: bool = False):
+        cfg = cluster.cfg
+        self.env = env
+        self.cluster = cluster
+        self.cfg = cfg
+        self.hub = hub
+        # KNIX semantics: a DB-type output is written ONLY to the remote
+        # Redis ("KNIX will utilize the remote Redis to store the function's
+        # output", §5) — consumers then fetch it over the network even if
+        # they run on the producer's node.
+        self.db_exclusive = db_exclusive
+        self.name = f"hybrid-{central}"
+        if central == "couch":
+            self.op, self.bw_eff = cfg.couch_op, cfg.couch_bw_eff
+        elif central == "redis":
+            self.op, self.bw_eff = cfg.redis_op, cfg.redis_bw_eff
+        else:
+            raise ValueError(central)
+        self.sizes: dict[str, float] = {}
+        self.local: dict[str, set[str]] = {n: set() for n in cluster.nodes}
+
+    def seed(self, node: str, key: str, size: float) -> None:
+        self.sizes[key] = size
+        self.local[node].add(key)
+
+    def put(self, node: str, key: str, size: float,
+            consumers: Iterable[str] = (),
+            ref_node: str | None = None) -> Event:
+        # Storage-type decision (MEM vs DB) is made against the GS's
+        # reference placement: ``ref_node`` is the producer's reference
+        # node, ``consumers`` the consumers' reference nodes.
+        self.sizes[key] = size
+        base = ref_node if ref_node is not None else node
+        remote = any(c != base for c in consumers)
+        return self.env.process(self._put(node, key, size, remote))
+
+    def _put(self, node: str, key: str, size: float, remote: bool):
+        if remote and self.db_exclusive:
+            # DB storage type: output lives only in the hub Redis.
+            yield self.env.timeout(self.op)
+            yield self.cluster.network.transfer(
+                node, self.hub, size / self.bw_eff, tag=f"{self.name}:put:{key}")
+            return
+        yield self.cluster.local_copy(size)          # local redis write
+        self.local[node].add(key)
+        if remote:                                   # upload for remote readers
+            yield self.env.timeout(self.op)
+            yield self.cluster.network.transfer(
+                node, self.hub, size / self.bw_eff, tag=f"{self.name}:put:{key}")
+
+    def get(self, node: str, key: str) -> Event:
+        return self.env.process(self._get(node, key))
+
+    def _get(self, node: str, key: str):
+        size = self.sizes[key]
+        if key in self.local[node]:
+            yield self.cluster.local_copy(size)
+            return size
+        yield self.env.timeout(self.op)
+        yield self.cluster.network.transfer(self.hub, node, size / self.bw_eff,
+                                            tag=f"{self.name}:get:{key}")
+        yield self.cluster.local_copy(size)
+        return size

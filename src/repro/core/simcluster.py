@@ -1,0 +1,149 @@
+"""Simulated FaaS cluster: nodes, cores, container pools, messaging.
+
+Models the paper's testbed (§5.1): 8 × ecs.g7.2xlarge (8 vCPU, 32 GB),
+functions run in 1-core/256 MB containers, link bandwidth shaped with
+wondershaper to 25–100 MB/s.  All constants live in :class:`SimConfig` so
+experiments can sweep them; defaults are calibrated to the paper's setup.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .sim import Env, Event, Network, Resource
+
+__all__ = ["SimConfig", "Node", "Cluster", "MASTER"]
+
+MASTER = "master"
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    """All knobs of the simulated cluster + data planes (SI units: s, B)."""
+
+    n_workers: int = 7                    # + 1 master = paper's 8 nodes
+    cores_per_node: int = 8               # ecs.g7.2xlarge vCPUs
+    bandwidth: float = 50e6               # per-node link, B/s (wondershaper)
+    msg_latency: float = 0.5e-3           # LAN RTT for control messages
+    meta_write: float = 150e-6            # paper §3.3.1: ~150 us
+    meta_query: float = 150e-6            # directory lookup service time
+    local_bw: float = 1.5e9               # container<->local-store memcpy/gRPC
+    local_op: float = 0.3e-3              # per-op local store overhead
+    # Central-store per-op overheads (request handling, (de)serialisation).
+    couch_op: float = 15e-3               # CouchDB HTTP + disk commit
+    couch_bw_eff: float = 0.6             # CouchDB effective wire efficiency
+    redis_op: float = 1.0e-3              # Redis RESP overhead
+    redis_bw_eff: float = 0.95
+    cold_start: float = 0.8               # container cold boot (docker run)
+    knix_process_start: float = 0.02      # KNIX in-container process fork
+    max_containers: int = 96              # 32GB / 256MB, with headroom
+    timeout: float = 60.0                 # experiment timeout (paper: 60 s)
+
+    def worker_names(self) -> list[str]:
+        return [f"node{i + 1}" for i in range(self.n_workers)]
+
+    def all_names(self) -> list[str]:
+        return [MASTER] + self.worker_names()
+
+
+class _ContainerPool:
+    """Warm-container pool for one (node, function-image) pair.
+
+    ``acquire`` yields the startup delay: 0 for a warm hit, ``cold_start``
+    otherwise.  Containers are kept warm after release (the paper keeps a
+    600 s lifetime; our experiments are shorter than that, so warm = forever).
+    """
+
+    def __init__(self, env: Env, cold_start: float, cap: Resource):
+        self.env = env
+        self.cold_start = cold_start
+        self.cap = cap
+        self.warm = 0
+        self.cold_starts = 0            # metric: how many cold boots happened
+
+    def acquire(self):
+        if self.warm > 0:
+            self.warm -= 1
+            return self.env.timeout(0.0, 0.0)
+        done = self.env.event()
+
+        def boot(_):
+            self.cold_starts += 1
+            self.env._at(self.env.now + self.cold_start, done.trigger,
+                         self.cold_start)
+        self.cap.acquire().add_waiter(boot)
+        return done
+
+    def release(self) -> None:
+        self.warm += 1
+
+    def prewarm(self) -> Event:
+        """Boot one container ahead of need (counts as a cold boot)."""
+        done = self.env.event()
+
+        def boot(_):
+            self.cold_starts += 1
+
+            def ready(_):
+                self.warm += 1
+                done.trigger(None)
+            self.env._at(self.env.now + self.cold_start, ready)
+        self.cap.acquire().add_waiter(boot)
+        return done
+
+
+class Node:
+    def __init__(self, env: Env, name: str, cfg: SimConfig):
+        self.env = env
+        self.name = name
+        self.cfg = cfg
+        self.cores = Resource(env, cfg.cores_per_node)
+        self.container_cap = Resource(env, cfg.max_containers)
+        self._pools: dict[str, _ContainerPool] = {}
+
+    def pool(self, image: str, cold_start: float | None = None) -> _ContainerPool:
+        p = self._pools.get(image)
+        if p is None:
+            p = _ContainerPool(
+                self.env,
+                self.cfg.cold_start if cold_start is None else cold_start,
+                self.container_cap)
+            self._pools[image] = p
+        return p
+
+    @property
+    def total_cold_starts(self) -> int:
+        return sum(p.cold_starts for p in self._pools.values())
+
+
+class Cluster:
+    """Nodes + fluid network + control-message helper."""
+
+    def __init__(self, env: Env, cfg: SimConfig):
+        self.env = env
+        self.cfg = cfg
+        names = cfg.all_names()
+        self.nodes = {n: Node(env, n, cfg) for n in names}
+        bw = {n: cfg.bandwidth for n in names}
+        self.network = Network(env, uplink=dict(bw), downlink=dict(bw),
+                               latency=cfg.msg_latency)
+
+    def workers(self) -> list[str]:
+        return self.cfg.worker_names()
+
+    def message(self, src: str, dst: str) -> Event:
+        """Small control message (invocation / completion notify)."""
+        if src == dst:
+            return self.env.timeout(0.0)
+        return self.env.timeout(self.cfg.msg_latency)
+
+    def local_copy(self, size: float) -> Event:
+        """Container <-> local store copy (gRPC over loopback / memcpy)."""
+        return self.env.timeout(self.cfg.local_op + size / self.cfg.local_bw)
+
+    # -- metrics ---------------------------------------------------------
+    def internode_bytes(self) -> float:
+        return sum(entry[2] for entry in self.network.log)
+
+    def cold_starts(self) -> int:
+        return sum(n.total_cold_starts for n in self.nodes.values())

@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the compute hot-spots of the assigned archs.
+
+The paper's contribution is data-plane/scheduler level (no kernel of its
+own), so kernels/ covers the assigned architectures' hot loops, each with an
+``ops.py`` jit wrapper and a ``ref.py`` pure-jnp oracle:
+
+* ``flash_attention``  — blocked online-softmax attention (train/prefill),
+  causal + GQA-aware, VMEM-tiled, MXU-aligned.
+* ``decode_attention`` — streaming single-token attention against a long KV
+  cache (decode_32k / long_500k shapes), split over KV blocks.
+* ``ssd``              — Mamba-2 SSD chunked scan (intra-chunk dual form +
+  carried recurrent state).
+
+Kernels target TPU (``pl.pallas_call`` + ``BlockSpec``); on this CPU-only
+container they are validated with ``interpret=True`` against the oracles.
+The XLA model paths default to the jnp implementations; configs can opt in
+with ``attention_impl="pallas"`` on TPU.
+"""

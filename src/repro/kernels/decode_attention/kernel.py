@@ -1,0 +1,111 @@
+"""Flash-decode Pallas TPU kernel: one new token vs a long KV cache.
+
+The decode shapes (decode_32k: 32k keys × 128 requests; long_500k: 524k
+keys) are bandwidth-bound: the kernel streams K/V blocks from HBM through
+VMEM once, carrying the online-softmax state in scratch, and masks the tail
+beyond the cache's valid ``length`` (scalar-prefetched so the same compiled
+kernel serves any fill level).
+
+Layout: q (B, Hk, G, D) — the G query rows per KV head form the matmul's M
+dimension (M=G·1; for GQA groups of 6–8 this still feeds the MXU better
+than one row, and B·Hk grid parallelism covers the chip).
+Grid: (B, Hk, nk), nk innermost/sequential.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention_kernel", "decode_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def decode_attention_kernel(length_ref, q_ref, k_ref, v_ref, o_ref,
+                            m_scr, l_scr, acc_scr, *,
+                            sm_scale: float, block_k: int,
+                            num_kv_blocks: int):
+    ik = pl.program_id(2)
+    G, D = q_ref.shape
+    length = length_ref[0]
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    k_start = ik * block_k
+    # Skip blocks entirely beyond the valid region.
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[...]                                         # (G, D)
+        k = k_ref[...]                                         # (bk, D)
+        v = v_ref[...]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale     # (G, bk)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (G, block_k), 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+        m_scr[...] = m_new
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[...] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                            length: jax.Array, *, block_k: int = 512,
+                            interpret: bool = False) -> jax.Array:
+    """q: (B, Hk, G, D); k, v: (B, Hk, L, D); length: () int32.
+
+    Returns (B, Hk, G, D)."""
+    B, Hk, G, D = q.shape
+    L = k.shape[2]
+    block_k = min(block_k, L)
+    if L % block_k:
+        raise ValueError(f"cache len {L} % block_k {block_k}")
+    nk = L // block_k
+    sm_scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(decode_attention_kernel, sm_scale=sm_scale,
+                               block_k=block_k, num_kv_blocks=nk)
+    length_arr = jnp.asarray(length, jnp.int32).reshape(1)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hk, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((None, None, G, D), lambda b, h, ik: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, block_k, D),
+                         lambda b, h, ik: (b, h, ik, 0)),
+            pl.BlockSpec((None, None, block_k, D),
+                         lambda b, h, ik: (b, h, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, G, D),
+                               lambda b, h, ik: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hk, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length_arr, q, k, v)

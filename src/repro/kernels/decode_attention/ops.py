@@ -1,0 +1,35 @@
+"""Jit'd public wrapper for decode attention (model-layout adapter)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import decode_attention_pallas
+from .ref import decode_attention_ref
+
+__all__ = ["decode_attention"]
+
+
+@partial(jax.jit, static_argnames=("block_k", "interpret", "use_kernel"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     length: jax.Array, *, block_k: int = 512,
+                     interpret: bool = False,
+                     use_kernel: bool = True) -> jax.Array:
+    """Model layout: q (B, 1, H, D); k, v (B, L, Hk, D) → (B, 1, H, D)."""
+    B, Sq, H, D = q.shape
+    if Sq != 1:
+        raise ValueError("decode expects a single query token")
+    Hk = k.shape[2]
+    G = H // Hk
+    qg = q[:, 0].reshape(B, Hk, G, D)
+    kg = k.transpose(0, 2, 1, 3)
+    vg = v.transpose(0, 2, 1, 3)
+    if use_kernel:
+        out = decode_attention_pallas(qg, kg, vg, length, block_k=block_k,
+                                      interpret=interpret)
+    else:
+        out = decode_attention_ref(qg, kg, vg, length)
+    return out.reshape(B, 1, H, D)

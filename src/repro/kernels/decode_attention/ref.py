@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the decode attention kernel."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["decode_attention_ref"]
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         length: jax.Array) -> jax.Array:
+    """q: (B, Hk, G, D); k, v: (B, Hk, L, D); mask keys >= length."""
+    D = q.shape[-1]
+    L = k.shape[2]
+    s = jnp.einsum("bhgd,bhkd->bhgk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    valid = jnp.arange(L) < length
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,132 @@
+"""Flash attention Pallas TPU kernel (GQA-native, causal-skipping).
+
+Layout: q is (B, Hk, G, Sq, D) — GQA groups folded next to the query rows so
+K/V are *never* repeated; each kernel invocation reshapes its (G, bq, D)
+query tile to a (G·bq, D) matrix, which keeps both matmuls MXU-shaped
+((G·bq, D) @ (D, bk) and (G·bq, bk) @ (bk, D)).
+
+Grid: (B, Hk, nq, nk) with nk innermost — TPU executes the last grid axis
+sequentially on a core, so the online-softmax running state (m, l, acc)
+lives in VMEM scratch and is carried across the nk steps; the output tile is
+written once on the final visited kv block.  Fully-masked causal tiles are
+skipped with ``@pl.when`` (the causal FLOP savings the XLA path cannot
+express — see DESIGN.md roofline notes).
+
+VMEM working set per step: q tile G·bq·D + k/v tiles 2·bk·D + scores
+G·bq·bk + acc G·bq·D (fp32) — e.g. G=8, bq=bk=128, D=128 → ~1.3 MB, far
+under the ~16 MB v5e VMEM budget; block sizes are parameters so the sweep
+test exercises several.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_kernel", "flash_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def flash_attention_kernel(q_ref, k_ref, v_ref, o_ref,
+                           m_scr, l_scr, acc_scr, *,
+                           causal: bool, sm_scale: float,
+                           block_q: int, block_k: int,
+                           num_kv_blocks: int):
+    """One (b, hk, iq, ik) grid step."""
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    G = q_ref.shape[0]
+    D = q_ref.shape[2]
+    rows = G * block_q
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Causal: tile is live unless every q-row precedes every k-column.
+    q_start = iq * block_q
+    k_start = ik * block_k
+    live = (q_start + block_q - 1 >= k_start) if causal else True
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[...].reshape(rows, D)                       # (G·bq, D)
+        k = k_ref[...]                                        # (bk, D)
+        v = v_ref[...]                                        # (bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale    # (G·bq, bk)
+        if causal:
+            rq = jax.lax.broadcasted_iota(jnp.int32, (rows, block_k), 0)
+            qpos = q_start + rq % block_q                     # row = g·bq+q
+            kpos = k_start + jax.lax.broadcasted_iota(
+                jnp.int32, (rows, block_k), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * corr + p.sum(axis=1)
+        m_scr[...] = m_new
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)               # (G·bq, D)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        out = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+        o_ref[...] = out.reshape(G, block_q, D)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, block_q: int = 128,
+                           block_k: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, Hk, G, Sq, D); k, v: (B, Hk, Skv, D) → (B, Hk, G, Sq, D)."""
+    B, Hk, G, Sq, D = q.shape
+    Skv = k.shape[2]
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    if Sq % block_q or Skv % block_k:
+        raise ValueError("sequence not divisible by block size")
+    nq, nk = Sq // block_q, Skv // block_k
+    sm_scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(
+        flash_attention_kernel, causal=causal, sm_scale=sm_scale,
+        block_q=block_q, block_k=block_k, num_kv_blocks=nk)
+
+    grid = (B, Hk, nq, nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, G, block_q, D),
+                         lambda b, h, iq, ik: (b, h, 0, iq, 0)),
+            pl.BlockSpec((None, None, block_k, D),
+                         lambda b, h, iq, ik: (b, h, ik, 0)),
+            pl.BlockSpec((None, None, block_k, D),
+                         lambda b, h, iq, ik: (b, h, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, G, block_q, D),
+                               lambda b, h, iq, ik: (b, h, 0, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G * block_q,), jnp.float32),
+            pltpu.VMEM((G * block_q,), jnp.float32),
+            pltpu.VMEM((G * block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

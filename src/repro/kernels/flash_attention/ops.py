@@ -1,0 +1,39 @@
+"""Jit'd public wrapper for flash attention (model-layout adapter)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import flash_attention_ref
+
+__all__ = ["flash_attention"]
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                   "interpret", "use_kernel"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False,
+                    use_kernel: bool = True) -> jax.Array:
+    """Model layout adapter: q (B, Sq, H, D); k, v (B, Skv, Hk, D).
+
+    Folds GQA groups, calls the Pallas kernel (or the oracle when
+    ``use_kernel=False``), and restores (B, Sq, H, D).
+    """
+    B, Sq, H, D = q.shape
+    Hk = k.shape[2]
+    G = H // Hk
+    qg = q.reshape(B, Sq, Hk, G, D).transpose(0, 2, 3, 1, 4)  # (B,Hk,G,Sq,D)
+    kg = k.transpose(0, 2, 1, 3)                              # (B,Hk,Skv,D)
+    vg = v.transpose(0, 2, 1, 3)
+    if use_kernel:
+        out = flash_attention_pallas(qg, kg, vg, causal=causal,
+                                     block_q=block_q, block_k=block_k,
+                                     interpret=interpret)
+    else:
+        out = flash_attention_ref(qg, kg, vg, causal=causal)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D)

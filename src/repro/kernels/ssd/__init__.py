@@ -1,0 +1,5 @@
+from .kernel import ssd_pallas
+from .ops import ssd
+from .ref import ssd_ref
+
+__all__ = ["ssd", "ssd_pallas", "ssd_ref"]

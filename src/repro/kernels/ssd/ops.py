@@ -1,0 +1,22 @@
+"""Jit'd public wrapper for the SSD kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import ssd_pallas
+from .ref import ssd_ref
+
+__all__ = ["ssd"]
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret", "use_kernel"))
+def ssd(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+        Cm: jax.Array, *, chunk: int = 128, interpret: bool = False,
+        use_kernel: bool = True) -> jax.Array:
+    """x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm, Cm: (B,S,N) → y (B,S,H,P)."""
+    if use_kernel:
+        return ssd_pallas(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)
+    return ssd_ref(x, dt, A, Bm, Cm, chunk=chunk)

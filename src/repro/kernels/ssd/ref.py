@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the SSD kernel — the model's own chunked scan."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.models.ssm import ssd_chunked
+
+__all__ = ["ssd_ref"]
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+            Cm: jax.Array, *, chunk: int = 128) -> jax.Array:
+    y, _ = ssd_chunked(x, dt, A, Bm, Cm, chunk)
+    return y

@@ -1,0 +1,229 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import (jax locks the device count at first init).
+# This is the ONLY entry point that forces 512 placeholder devices; smoke
+# tests and benches see the real single CPU device.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each live cell (see input_specs.live_cells) on both production meshes
+(16×16 single-pod; 2×16×16 multi-pod), this driver:
+
+1. builds the jitted step (train_step / prefill / decode) with explicit
+   in/out shardings from the sharding rules,
+2. ``.lower(...)`` on ShapeDtypeStruct inputs (no allocation),
+3. ``.compile()`` — SPMD partitioning must succeed; sharding mismatches,
+   unsupported collectives or compile-time OOMs are bugs,
+4. records ``memory_analysis()`` / ``cost_analysis()`` and the collective
+   operations parsed from the optimized HLO into a JSON blob consumed by
+   ``analysis/roofline.py`` and EXPERIMENTS.md.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+        [--mesh single|multi|both] [--out results/dryrun]
+        [--zero1] [--zero3] [--seq-parallel]
+"""
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.launch.input_specs import (Cell, SHAPES, input_specs, is_skipped,
+                                      live_cells)
+from repro.launch.mesh import make_production_mesh
+from repro.analysis.hlo import (collective_summary, count_scan_trips,
+                                hbm_bytes, matmul_flops)
+from repro.analysis.flops import model_flops
+
+__all__ = ["run_cell", "main"]
+
+
+def _apply_overrides(cfg, overrides):
+    if not overrides:
+        return cfg
+    import dataclasses
+    kw = {}
+    for item in overrides:
+        k, v = item.split("=", 1)
+        cur = getattr(cfg, k)
+        if isinstance(cur, bool):
+            kw[k] = v.lower() in ("1", "true", "yes")
+        elif isinstance(cur, int):
+            kw[k] = int(v)
+        elif isinstance(cur, float):
+            kw[k] = float(v)
+        else:
+            kw[k] = v
+    return dataclasses.replace(cfg, **kw)
+
+
+def _build_lowered(cell: Cell, mesh, *, zero1=False, zero3=False,
+                   overrides=None):
+    """Returns jax.stages.Lowered for the cell's step on the mesh."""
+    from repro.models import build_model
+    from repro.optim.adamw import AdamWConfig
+    from repro.runtime.serve_lib import (abstract_cache, build_decode_step,
+                                         build_prefill_step, cache_specs)
+    from repro.runtime.train_lib import (abstract_train_state,
+                                         build_train_step)
+    from repro.launch.input_specs import FRAMES_LEN
+
+    cfg = _apply_overrides(get_config(cell.arch), overrides)
+    model = build_model(cfg)
+    specs = input_specs(cell, cfg)
+
+    if cell.kind == "train":
+        opt_cfg = AdamWConfig(
+            state_dtype=jnp.bfloat16 if cell.arch == "kimi-k2-1t-a32b"
+            else jnp.float32)
+        step, _ = build_train_step(model, mesh, opt_cfg, zero1=zero1,
+                                   zero3=zero3,
+                                   batch_tree=specs["batch"])
+        state = abstract_train_state(model, mesh, opt_cfg)
+        return step.lower(state, specs["batch"])
+
+    if cell.kind == "prefill":
+        step = build_prefill_step(model, mesh, cell.batch, cell.seq,
+                                  zero3=zero3)
+        cache = abstract_cache(model, cell.batch, cell.seq, filled=False,
+                               memory_len=FRAMES_LEN)
+        if cfg.family == "encdec":
+            return step.lower(_abs_params(model), specs["frames"],
+                              specs["tokens"], cache)
+        return step.lower(_abs_params(model), specs["tokens"], cache)
+
+    # decode
+    step = build_decode_step(model, mesh, cell.batch, cell.seq, zero3=zero3)
+    cache = abstract_cache(model, cell.batch, cell.seq, filled=True,
+                           memory_len=FRAMES_LEN)
+    return step.lower(_abs_params(model), specs["token"], cache)
+
+
+def _abs_params(model):
+    from repro.models.param import abstract_params
+    return abstract_params(model.param_decls())
+
+
+def run_cell(cell: Cell, mesh_kind: str, *, zero1=False, zero3=False,
+             hlo_path=None, overrides=None) -> dict:
+    """Lower + compile one cell; returns the roofline-input record."""
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    n_chips = mesh.size
+    t0 = time.time()
+    lowered = _build_lowered(cell, mesh, zero1=zero1, zero3=zero3,
+                             overrides=overrides)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_rec = {
+            "argument_size_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_size_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_size_bytes":
+                getattr(mem, "generated_code_size_in_bytes", None),
+        } if mem is not None else {}
+    except Exception:           # pragma: no cover - backend-dependent
+        mem_rec = {}
+
+    hlo = compiled.as_text()
+    if hlo_path is not None:
+        import gzip
+        with gzip.open(hlo_path, "wt") as fh:
+            fh.write(hlo)
+    coll = collective_summary(hlo)
+    scans = count_scan_trips(hlo)
+    dot_flops = matmul_flops(hlo)      # per device, loop-scaled
+    hbm = hbm_bytes(hlo)               # per device, loop-scaled
+    cfg = get_config(cell.arch)
+    mf = model_flops(cfg, cell)
+
+    rec = {
+        "arch": cell.arch,
+        "shape": cell.shape,
+        "kind": cell.kind,
+        "mesh": mesh_kind,
+        "n_chips": n_chips,
+        "seq": cell.seq,
+        "batch": cell.batch,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "hlo_flops": cost.get("flops"),
+        "hlo_bytes": cost.get("bytes accessed"),
+        "dot_flops_per_device": dot_flops,
+        "hbm_bytes_per_device": hbm,
+        "cost_analysis": {k: v for k, v in cost.items()
+                          if isinstance(v, (int, float))},
+        "memory_analysis": mem_rec,
+        "collectives": coll,
+        "scan_trip_counts": scans,
+        "model_flops": mf,
+        "zero1": zero1, "zero3": zero3,
+        "overrides": list(overrides or ()),
+    }
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, choices=list_archs() + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--zero3", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--save-hlo", action="store_true",
+                    help="also write <cell>.hlo.gz for offline re-analysis")
+    ap.add_argument("--override", action="append", default=[],
+                    metavar="KEY=VAL",
+                    help="ModelConfig field override (repeatable)")
+    args = ap.parse_args(argv)
+
+    cells = [c for c in live_cells()
+             if (args.arch is None or c.arch == args.arch)
+             and (args.shape is None or c.shape == args.shape)]
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    failures = 0
+    for cell in cells:
+        for mk in meshes:
+            name = f"{cell.arch}__{cell.shape}__{mk}__{args.tag}"
+            path = outdir / f"{name}.json"
+            try:
+                rec = run_cell(cell, mk, zero1=args.zero1, zero3=args.zero3,
+                               hlo_path=(outdir / f"{name}.hlo.gz")
+                               if args.save_hlo else None,
+                               overrides=args.override)
+                path.write_text(json.dumps(rec, indent=1))
+                print(f"OK   {name}: compile={rec['compile_s']}s "
+                      f"flops={rec['hlo_flops']:.3e} "
+                      f"coll_bytes={rec['collectives']['total_bytes']:.3e}",
+                      flush=True)
+            except Exception as e:   # noqa: BLE001 - report and continue
+                failures += 1
+                print(f"FAIL {name}: {type(e).__name__}: {e}", flush=True)
+                (outdir / f"{name}.err").write_text(traceback.format_exc())
+    print(f"done: {len(cells) * len(meshes) - failures} ok, "
+          f"{failures} failed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,110 @@
+"""Abstract inputs for every (architecture × shape) dry-run cell.
+
+Everything is ``jax.ShapeDtypeStruct`` — the multi-billion/trillion
+parameter configs are *lowered*, never materialized.  The modality
+frontends are stubs per the assignment: VLM cells get precomputed patch
+embeddings + 3D M-RoPE positions, audio cells get precomputed frame
+embeddings.
+
+Shape cells (LM pool):
+  train_4k     seq 4096   global_batch 256   → train_step
+  prefill_32k  seq 32768  global_batch 32    → serve prefill
+  decode_32k   seq 32768  global_batch 128   → serve decode (1 new token)
+  long_500k    seq 524288 global_batch 1     → serve decode; only for
+               sub-quadratic archs (mamba2, jamba) — see DESIGN.md skips.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, list_archs
+from ..models import build_model
+from ..models.config import ModelConfig
+
+__all__ = ["SHAPES", "Cell", "live_cells", "input_specs", "is_skipped"]
+
+SDS = jax.ShapeDtypeStruct
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+# long_500k runs only for sub-quadratic sequence mixers (brief: "skip for
+# pure full-attention archs ... run for SSM/hybrid").
+LONG_OK = {"mamba2-370m", "jamba-1.5-large-398b"}
+
+# Audio/vision stub lengths.
+VISION_PATCHES = {"train_4k": 256, "prefill_32k": 1024}
+FRAMES_LEN = 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: str
+
+    @property
+    def kind(self) -> str:
+        return SHAPES[self.shape]["kind"]
+
+    @property
+    def seq(self) -> int:
+        return SHAPES[self.shape]["seq"]
+
+    @property
+    def batch(self) -> int:
+        return SHAPES[self.shape]["batch"]
+
+    def __str__(self) -> str:
+        return f"{self.arch}×{self.shape}"
+
+
+def is_skipped(arch: str, shape: str) -> str | None:
+    """Returns a skip reason or None."""
+    if shape == "long_500k" and arch not in LONG_OK:
+        return ("full-attention arch: 524k dense-softmax decode is the "
+                "quadratic regime the brief excludes")
+    return None
+
+
+def live_cells() -> list[Cell]:
+    out = []
+    for arch in list_archs():
+        for shape in SHAPES:
+            if not is_skipped(arch, shape):
+                out.append(Cell(arch, shape))
+    return out
+
+
+def input_specs(cell: Cell, cfg: ModelConfig | None = None) -> dict:
+    """Abstract model inputs for the cell (batch dict for train; token /
+    extras for serving).  Cache structs are built by the dry-run via
+    ``serve_lib.abstract_cache`` (they are state, not inputs)."""
+    cfg = cfg or get_config(cell.arch)
+    B, S = cell.batch, cell.seq
+    kind = cell.kind
+    if kind == "train":
+        batch = {"tokens": SDS((B, S + 1), jnp.int32)}
+        if cfg.family == "vlm":
+            nv = VISION_PATCHES[cell.shape]
+            batch["vision_embeds"] = SDS((B, nv, cfg.d_model), jnp.bfloat16)
+            batch["mrope_positions"] = SDS((3, B, S), jnp.int32)
+        if cfg.family == "encdec":
+            batch["frames"] = SDS((B, FRAMES_LEN, cfg.d_model), jnp.bfloat16)
+        return {"batch": batch}
+    if kind == "prefill":
+        out = {"tokens": SDS((B, S), jnp.int32)}
+        if cfg.family == "vlm":
+            out["mrope_positions"] = SDS((3, B, S), jnp.int32)
+        if cfg.family == "encdec":
+            out["frames"] = SDS((B, FRAMES_LEN, cfg.d_model), jnp.bfloat16)
+        return out
+    # decode: one new token against a cache of length `seq`
+    return {"token": SDS((B, 1), jnp.int32)}

@@ -1,0 +1,27 @@
+"""Production mesh construction (assignment-mandated shapes).
+
+Defined as functions — importing this module never touches jax device
+state, so smoke tests keep their single CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over however many local devices exist (tests/examples)."""
+    n = len(jax.devices())
+    if data * model > n:
+        data, model = n, 1
+    return jax.make_mesh((data, model), ("data", "model"))

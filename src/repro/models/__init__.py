@@ -1,0 +1,18 @@
+"""Model zoo: composable pure-JAX layers + the per-family assemblies."""
+
+from .config import ModelConfig
+from .lm import LM, Cache
+from .encdec import EncDecLM, EncDecCache
+from .param import (ArrayDecl, abstract_params, init_params, logical_axes,
+                    param_bytes, param_count)
+
+__all__ = ["ModelConfig", "LM", "Cache", "EncDecLM", "EncDecCache",
+           "ArrayDecl", "abstract_params", "init_params", "logical_axes",
+           "param_bytes", "param_count", "build_model"]
+
+
+def build_model(cfg: ModelConfig):
+    """Family-dispatching factory."""
+    if cfg.family == "encdec":
+        return EncDecLM(cfg)
+    return LM(cfg)

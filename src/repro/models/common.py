@@ -1,0 +1,132 @@
+"""Shared layer primitives: norms, activations, rotary embeddings.
+
+Everything is a pure function over explicit params; dtypes follow the
+"compute in bf16, normalize/softmax in fp32" convention used by production
+LM stacks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rms_norm", "layer_norm", "silu", "gelu", "squared_relu",
+           "rope_table", "apply_rope", "apply_mrope", "softmax_fp32",
+           "cross_entropy_loss"]
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dtype)
+
+
+def silu(x: jax.Array) -> jax.Array:
+    return x * jax.nn.sigmoid(x)
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x, approximate=True)
+
+
+def squared_relu(x: jax.Array) -> jax.Array:
+    """Primer / Nemotron-4 activation: relu(x)**2."""
+    r = jax.nn.relu(x)
+    return r * r
+
+
+ACTIVATIONS = {"silu": silu, "gelu": gelu, "squared_relu": squared_relu}
+
+
+def softmax_fp32(x: jax.Array, axis: int = -1) -> jax.Array:
+    return jax.nn.softmax(x.astype(jnp.float32), axis=axis)
+
+
+# ----------------------------------------------------------------------
+# Rotary position embeddings
+# ----------------------------------------------------------------------
+
+def rope_table(positions: jax.Array, head_dim: int,
+               theta: float = 10000.0) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables for given integer positions.
+
+    positions: (...,) int32  →  cos, sin: (..., head_dim // 2) fp32.
+    """
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate pairs (split-half convention).  x: (B, S, H, D);
+    cos/sin: (B, S, D/2) or (S, D/2)."""
+    dtype = x.dtype
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    if cos.ndim == 2:          # (S, D/2) -> broadcast over batch, heads
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:                      # (B, S, D/2) -> broadcast over heads
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    return jnp.concatenate([out1, out2], axis=-1).astype(dtype)
+
+
+def apply_mrope(x: jax.Array, positions_3d: jax.Array, head_dim: int,
+                sections: tuple[int, int, int] | None = None,
+                theta: float = 1e6) -> jax.Array:
+    """Qwen2-VL M-RoPE: the head dim is split into (temporal, h, w)
+    sections, each rotated by its own position stream.
+
+    x: (B, S, H, D); positions_3d: (3, B, S) int32.
+    ``sections`` are in *half-dim* units and must sum to D // 2; the default
+    reproduces Qwen2-VL's (16, 24, 24) split (1:1.5:1.5) for any head_dim.
+    """
+    half_total = head_dim // 2
+    if sections is None:
+        t = half_total // 4
+        w = (half_total - t) // 2
+        h = half_total - t - w
+        sections = (t, h, w)
+    if sum(sections) != half_total:
+        raise ValueError(f"sections {sections} must sum to {half_total}")
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    # Build a per-position angle table by section.
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                        total_repeat_length=half)             # (half,)
+    pos = positions_3d.astype(jnp.float32)                    # (3, B, S)
+    # angle[b, s, i] = pos[sec_id[i], b, s] * freqs[i]
+    pos_sel = jnp.take(pos, sec_id, axis=0)                   # (half, B, S)
+    angles = jnp.moveaxis(pos_sel, 0, -1) * freqs             # (B, S, half)
+    return apply_rope(x, jnp.cos(angles), jnp.sin(angles))
+
+
+# ----------------------------------------------------------------------
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       mask: jax.Array | None = None) -> jax.Array:
+    """Mean token-level cross entropy in fp32.  logits: (..., V)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

@@ -1,0 +1,38 @@
+"""Feed-forward sublayers: gated (SwiGLU) and plain (squared-ReLU) MLPs."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ACTIVATIONS
+from .config import ModelConfig
+from .param import ArrayDecl
+
+__all__ = ["mlp_decls", "mlp"]
+
+
+def mlp_decls(cfg: ModelConfig, layers: int | None = None,
+              d_ff: int | None = None) -> dict:
+    M = cfg.d_model
+    F = cfg.d_ff if d_ff is None else d_ff
+    lead = (layers,) if layers else ()
+    lax_ = ("layers",) if layers else ()
+    decls = {
+        "w_up": ArrayDecl(lead + (M, F), lax_ + ("embed", "mlp")),
+        "w_down": ArrayDecl(lead + (F, M), lax_ + ("mlp", "embed")),
+    }
+    if cfg.glu:
+        decls["w_gate"] = ArrayDecl(lead + (M, F), lax_ + ("embed", "mlp"))
+    return decls
+
+
+def mlp(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    act = ACTIVATIONS[cfg.activation]
+    up = jnp.einsum("bsm,mf->bsf", x, params["w_up"])
+    if cfg.glu:
+        gate = jnp.einsum("bsm,mf->bsf", x, params["w_gate"])
+        h = act(gate) * up
+    else:
+        h = act(up)
+    return jnp.einsum("bsf,fm->bsm", h, params["w_down"])

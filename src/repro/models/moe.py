@@ -1,0 +1,223 @@
+"""Mixture-of-Experts FFN with expert parallelism via ``shard_map``.
+
+This is the DFlow-style data plane applied inside one layer (DESIGN.md §3):
+experts are sharded over the ``model`` mesh axis; every model-rank receives
+the (data-sharded, model-replicated) token block, routes it, and *locally*
+dispatches only the tokens destined for its resident experts — a
+receiver-driven exchange in which each expert shard pulls exactly its own
+work, and the only collective is the final ``psum`` combine (the same
+all-reduce shape dense tensor-parallel FFNs pay).
+
+Dispatch is scatter-based (sort → rank-in-expert → scatter into an
+``(E_local, C, M)`` buffer), never materializing the ``(tokens, E, C)``
+one-hot of the classic GShard formulation — with 384-expert configs that
+tensor would be ~100 GB.  Token overflow beyond the per-expert capacity
+``C = ceil(T·k/E · capacity_factor)`` is dropped (standard GShard dropping
+semantics); a load-balance auxiliary loss keeps the router honest.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import ACTIVATIONS, softmax_fp32
+from .config import ModelConfig
+from .param import ArrayDecl, normal_init
+from ..sharding.context import current_mesh, data_axes, model_axis
+
+__all__ = ["moe_decls", "moe"]
+
+
+def moe_decls(cfg: ModelConfig, layers: int | None = None) -> dict:
+    M, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    lead = (layers,) if layers else ()
+    lax_ = ("layers",) if layers else ()
+    decls = {
+        "router": ArrayDecl(lead + (M, E), lax_ + ("embed", None),
+                            init=normal_init(0.02), dtype=jnp.float32),
+        "w_up": ArrayDecl(lead + (E, M, F),
+                          lax_ + ("experts", "embed", "expert_mlp")),
+        "w_down": ArrayDecl(lead + (E, F, M),
+                            lax_ + ("experts", "expert_mlp", "embed")),
+    }
+    if cfg.glu:
+        decls["w_gate"] = ArrayDecl(lead + (E, M, F),
+                                    lax_ + ("experts", "embed", "expert_mlp"))
+    if cfg.n_shared_experts:
+        Fs = F * cfg.n_shared_experts
+        decls["shared_up"] = ArrayDecl(lead + (M, Fs), lax_ + ("embed", "mlp"))
+        decls["shared_gate"] = ArrayDecl(lead + (M, Fs), lax_ + ("embed", "mlp"))
+        decls["shared_down"] = ArrayDecl(lead + (Fs, M), lax_ + ("mlp", "embed"))
+    return decls
+
+
+def _capacity(tokens: int, k: int, n_experts: int, factor: float) -> int:
+    c = int(math.ceil(tokens * k / n_experts * factor))
+    return max(c, 4)
+
+
+def _moe_local(x, topi, gates, w_gate, w_up, w_down, shared, *,
+               cfg: ModelConfig, n_model: int, has_model_axis: bool,
+               d_axes: tuple[str, ...] = ()):
+    """Per-device block: x (B_loc, S, M); experts (E_loc, ...).
+
+    Routing (``topi``/``gates``, (B_loc, S, k)) is computed *outside* the
+    shard_map in global pjit land — computing it per-rank would make every
+    routing intermediate a replicated value whose cotangent needs a psum
+    over the model axis (measured: ~2 extra activation-sized all-reduces
+    per layer, §Perf kimi iteration 2)."""
+    B, S, M = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    E_loc = E // n_model
+    act = ACTIVATIONS[cfg.activation]
+    t = x.reshape(B * S, M)
+    T = B * S
+    topi = topi.reshape(T, k)
+    gates = gates.reshape(T, k)
+    # Capacity per (local) expert: expected load is T·k/E tokens from this
+    # data shard's block, padded by the capacity factor.
+    C = _capacity(T, k, E, cfg.capacity_factor)
+
+    rank = jax.lax.axis_index("model") if has_model_axis else 0
+    e_base = rank * E_loc
+    local = topi - e_base                                      # (T, k)
+    sel = (local >= 0) & (local < E_loc)
+    lid = jnp.where(sel, local, E_loc)                         # E_loc = drop
+    lid_f = lid.reshape(-1)                                    # (T*k,)
+
+    # rank within expert (stable sort → arrival-order priority on overflow)
+    order = jnp.argsort(lid_f, stable=True)
+    sorted_lid = lid_f[order]
+    starts = jnp.searchsorted(sorted_lid, jnp.arange(E_loc + 1))
+    pos_sorted = jnp.arange(T * k) - starts[sorted_lid]
+
+    if cfg.moe_dispatch == "gather":
+        # Index-inverted data plane: build slot→(token,k) once (O(T·k) int
+        # scatter, no M factor), then dispatch = one (E_loc·C, M) gather
+        # and combine = one (E_loc·C, M) scatter-add.  The (T·k, M)
+        # dispatch/combine tensors of the baseline never materialize.
+        Cp1 = C + 1
+        slot_sorted = jnp.minimum(pos_sorted, C)
+        flat_sorted = sorted_lid * Cp1 + slot_sorted       # (T*k,) in
+        n_flat = (E_loc + 1) * Cp1                         # incl. drop rows
+        tok_k_for_flat = jnp.zeros((n_flat,), jnp.int32).at[
+            flat_sorted].set(order.astype(jnp.int32))
+        valid_flat = jnp.zeros((n_flat,), jnp.bool_).at[flat_sorted].set(
+            (pos_sorted < C) & (sorted_lid < E_loc))
+        grid = tok_k_for_flat.reshape(E_loc + 1, Cp1)[:E_loc, :C]
+        vgrid = valid_flat.reshape(E_loc + 1, Cp1)[:E_loc, :C]
+        tok_grid = grid // k                               # (E_loc, C)
+        buf = jnp.where(vgrid[..., None], t[tok_grid], 0)  # (E_loc, C, M)
+    else:
+        pos = jnp.zeros_like(pos_sorted).at[order].set(pos_sorted)
+        keep = (lid_f < E_loc) & (pos < C)
+        slot = jnp.where(keep, pos, C)                     # C = trash slot
+        eid = jnp.where(keep, lid_f, 0)
+        tok = jnp.repeat(jnp.arange(T), k)
+        x_rep = jnp.where(keep[:, None], t[tok], 0).astype(t.dtype)
+        buf = jnp.zeros((E_loc, C + 1, M), t.dtype)
+        buf = buf.at[eid, slot].add(x_rep)
+        buf = buf[:, :C]                                   # (E_loc, C, M)
+
+    up = jnp.einsum("ecm,emf->ecf", buf, w_up)
+    if w_gate is not None:
+        g = jnp.einsum("ecm,emf->ecf", buf, w_gate)
+        h = act(g) * up
+    else:
+        h = act(up)
+    out_buf = jnp.einsum("ecf,efm->ecm", h, w_down)        # (E_loc, C, M)
+
+    if cfg.moe_dispatch == "gather":
+        gate_grid = jnp.where(vgrid, gates.reshape(-1)[grid], 0.0)
+        contrib = (out_buf.astype(jnp.float32)
+                   * gate_grid[..., None].astype(jnp.float32))
+        y = jnp.zeros((T, M), jnp.float32).at[tok_grid.reshape(-1)].add(
+            contrib.reshape(-1, M))
+    else:
+        out_buf = jnp.concatenate(
+            [out_buf, jnp.zeros((E_loc, 1, M), out_buf.dtype)], axis=1)
+        y_tk = out_buf[eid, slot] * keep[:, None]          # (T*k, M)
+        w = (gates.reshape(-1) * keep).astype(jnp.float32)
+        y = (y_tk.astype(jnp.float32) * w[:, None]).reshape(T, k, M).sum(1)
+
+    if shared is not None:
+        s_gate, s_up, s_down = shared
+        g = t @ s_gate
+        u = t @ s_up
+        y = y + ((act(g) * u) @ s_down).astype(jnp.float32)
+
+    if has_model_axis:
+        y = jax.lax.psum(y, "model")
+    return y.reshape(B, S, M).astype(x.dtype)
+
+
+def moe(params: dict, x: jax.Array, cfg: ModelConfig):
+    """MoE sublayer.  x: (B, S, M) → (y, aux_loss)."""
+    mesh = current_mesh()
+    m_axis = model_axis(mesh)
+    d_axes = data_axes(mesh)
+    n_model = mesh.shape[m_axis] if m_axis else 1
+    has_model = m_axis is not None
+    E, k = cfg.n_experts, cfg.top_k
+
+    # -- routing in global pjit land (replicated math stays out of the
+    # manual region; see _moe_local docstring) --------------------------
+    logits = jnp.einsum("bsm,me->bse", x.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)                # (B, S, k)
+    gates = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+    # GShard load-balance aux: importance × top-1 load over global tokens.
+    me = probs.reshape(-1, E).mean(axis=0)
+    ce = jax.nn.one_hot(topi[..., 0].reshape(-1), E,
+                        dtype=jnp.float32).mean(axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    shared = None
+    if cfg.n_shared_experts:
+        shared = (params["shared_gate"], params["shared_up"],
+                  params["shared_down"])
+
+    fn = partial(_moe_local, cfg=cfg, n_model=n_model,
+                 has_model_axis=has_model, d_axes=d_axes)
+
+    nd = 1
+    for a in d_axes:
+        nd *= mesh.shape[a]
+    if d_axes and x.shape[0] % nd == 0:
+        bspec = tuple(d_axes) if len(d_axes) > 1 else d_axes[0]
+    else:
+        bspec = None        # tiny decode batches: replicate tokens
+    dspec = P(bspec, None, None)                        # (B, S, M)
+    kspec = P(bspec, None, None)                        # (B, S, k)
+    espec3 = P(m_axis, None, None)                      # (E, M, F)
+    sspec = P(None, m_axis)                             # shared up/gate (M,Fs)
+    sdspec = P(m_axis, None)                            # shared down (Fs,M)
+
+    w_gate = params.get("w_gate")
+    args = [x, topi, gates, params["w_up"], params["w_down"]]
+    in_specs = [dspec, kspec, kspec, espec3, espec3]
+    if w_gate is not None:
+        args.append(w_gate)
+        in_specs.append(espec3)
+    if shared is not None:
+        args.extend(shared)                 # gate, up, down
+        in_specs.extend([sspec, sspec, sdspec])
+
+    def wrapped(x_, ti_, g_, wu_, wd_, *rest):
+        rest = list(rest)
+        wg_ = rest.pop(0) if w_gate is not None else None
+        sh_ = tuple(rest) if shared is not None else None  # (gate, up, down)
+        return fn(x_, ti_, g_, wg_, wu_, wd_, sh_)
+
+    y = jax.shard_map(
+        wrapped, mesh=mesh,
+        in_specs=tuple(in_specs), out_specs=dspec,
+        check_vma=False,
+    )(*args)
+    return y, aux

@@ -1,0 +1,113 @@
+"""Parameter declaration system: one schema → init, shapes, shardings.
+
+Every model declares its parameters as a pytree of :class:`ArrayDecl`
+(shape, dtype, *logical axes*, initializer).  From that single schema we
+derive:
+
+* ``init_params``      — materialized arrays (smoke tests, examples);
+* ``abstract_params``  — ``jax.ShapeDtypeStruct`` tree (dry-run lowering:
+  no allocation ever happens for the full-size configs);
+* ``logical_axes``     — pytree of logical-axis tuples which
+  :mod:`repro.sharding.rules` maps to mesh ``PartitionSpec``s.
+
+Logical axis vocabulary (mapped in sharding/rules.py):
+``batch, seq, embed, heads, kv_heads, head_dim, mlp, vocab, experts,
+expert_mlp, ssm_heads, ssm_state, conv, layers, stage, None``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ArrayDecl", "init_params", "abstract_params", "logical_axes",
+           "param_count", "param_bytes"]
+
+
+Initializer = Callable[[jax.Array, tuple[int, ...], Any], jax.Array]
+
+
+def _fan_in_init(fan_axis: int = -2):
+    def init(key, shape, dtype):
+        fan_in = shape[fan_axis] if len(shape) >= 2 else shape[-1]
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+    return init
+
+
+def zeros_init(key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+def normal_init(stddev: float = 0.02):
+    def init(key, shape, dtype):
+        return (jax.random.normal(key, shape, jnp.float32) * stddev).astype(dtype)
+    return init
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrayDecl:
+    """Declaration of one parameter array."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]          # logical axis names, len == ndim
+    dtype: Any = jnp.bfloat16
+    init: Initializer | None = None       # default: fan-in normal
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(
+                f"shape {self.shape} vs axes {self.axes} rank mismatch")
+
+    def initializer(self) -> Initializer:
+        return self.init if self.init is not None else _fan_in_init()
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+    @property
+    def nbytes(self) -> int:
+        return self.size * jnp.dtype(self.dtype).itemsize
+
+
+def _is_decl(x) -> bool:
+    return isinstance(x, ArrayDecl)
+
+
+def init_params(decls, key: jax.Array):
+    """Materialize a pytree of ArrayDecl into arrays (deterministic)."""
+    leaves, treedef = jax.tree.flatten(decls, is_leaf=_is_decl)
+    keys = jax.random.split(key, len(leaves))
+    arrays = [d.initializer()(k, d.shape, d.dtype)
+              for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrays)
+
+
+def abstract_params(decls):
+    """ShapeDtypeStruct tree — for .lower() without touching memory."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype),
+        decls, is_leaf=_is_decl)
+
+
+def logical_axes(decls):
+    """Pytree of logical-axis tuples, same structure as the params."""
+    return jax.tree.map(lambda d: d.axes, decls, is_leaf=_is_decl)
+
+
+def param_count(decls) -> int:
+    return sum(d.size for d in jax.tree.leaves(decls, is_leaf=_is_decl))
+
+
+def param_bytes(decls) -> int:
+    return sum(d.nbytes for d in jax.tree.leaves(decls, is_leaf=_is_decl))

@@ -1,0 +1,237 @@
+"""Mamba-2 (SSD — state-space duality) block, chunked scan + cached decode.
+
+The SSD computation follows the minimal chunked formulation of the Mamba-2
+paper (arXiv:2405.21060, `ssd_minimal`): the sequence is cut into chunks of
+length Q; within a chunk the dual quadratic (attention-like) form is used,
+and a ``lax.scan`` carries the (heads, head_dim, state) recurrent state
+across chunks.  This gives O(S·Q) work with O(Q²) intra-chunk matrices —
+the same structure the Pallas `ssd` kernel tiles into VMEM.
+
+Decode is the O(1) recurrence: ``h ← h·exp(dt·A) + dt·x⊗B;  y = h·C + D·x``,
+with a rolling buffer for the short causal conv.
+
+Sharding: the inner width (``d_inner = 2·d_model``) is head-major
+(heads × head_dim) and heads shard over the ``model`` axis; B/C projections
+are head-shared (G=1 groups) and replicated.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import rms_norm, silu
+from .config import ModelConfig
+from .param import ArrayDecl, normal_init, ones_init, zeros_init
+
+__all__ = ["ssm_decls", "SSMCache", "init_ssm_cache", "mamba_block",
+           "ssd_chunked", "ssd_decode_step"]
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array      # (B, H, P, N) recurrent state
+    conv_x: jax.Array     # (B, K-1, DI) conv tail for x
+    conv_B: jax.Array     # (B, K-1, N)
+    conv_C: jax.Array     # (B, K-1, N)
+
+
+def ssm_decls(cfg: ModelConfig, layers: int | None = None) -> dict:
+    M, DI = cfg.d_model, cfg.d_inner
+    H, P, N, K = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_conv
+    lead = (layers,) if layers else ()
+    lax_ = ("layers",) if layers else ()
+
+    def dt_bias_init(key, shape, dtype):
+        # dt in [1e-3, 1e-1] after softplus — standard mamba init.
+        u = jax.random.uniform(key, shape, jnp.float32)
+        dt = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype)
+
+    def a_log_init(key, shape, dtype):
+        a = jnp.arange(1, shape[-1] + 1, dtype=jnp.float32)
+        return jnp.broadcast_to(jnp.log(a), shape).astype(dtype)
+
+    return {
+        "w_z": ArrayDecl(lead + (M, DI), lax_ + ("embed", "ssm_inner")),
+        "w_x": ArrayDecl(lead + (M, DI), lax_ + ("embed", "ssm_inner")),
+        "w_B": ArrayDecl(lead + (M, N), lax_ + ("embed", None)),
+        "w_C": ArrayDecl(lead + (M, N), lax_ + ("embed", None)),
+        "w_dt": ArrayDecl(lead + (M, H), lax_ + ("embed", "ssm_heads")),
+        "dt_bias": ArrayDecl(lead + (H,), lax_ + ("ssm_heads",),
+                             dtype=jnp.float32, init=dt_bias_init),
+        "A_log": ArrayDecl(lead + (H,), lax_ + ("ssm_heads",),
+                           dtype=jnp.float32, init=a_log_init),
+        "D": ArrayDecl(lead + (H,), lax_ + ("ssm_heads",),
+                       dtype=jnp.float32, init=ones_init),
+        "conv_x": ArrayDecl(lead + (K, DI), lax_ + (None, "ssm_inner"),
+                            init=normal_init(0.1)),
+        "conv_B": ArrayDecl(lead + (K, N), lax_ + (None, None),
+                            init=normal_init(0.1)),
+        "conv_C": ArrayDecl(lead + (K, N), lax_ + (None, None),
+                            init=normal_init(0.1)),
+        "norm": ArrayDecl(lead + (DI,), lax_ + ("ssm_inner",),
+                          init=ones_init),
+        "out_proj": ArrayDecl(lead + (DI, M), lax_ + ("ssm_inner", "embed")),
+    }
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int,
+                   dtype=jnp.float32) -> SSMCache:
+    H, P, N, K = (cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state,
+                  cfg.ssm_conv)
+    DI = cfg.d_inner
+    return SSMCache(
+        state=jnp.zeros((batch, H, P, N), dtype),
+        conv_x=jnp.zeros((batch, K - 1, DI), dtype),
+        conv_B=jnp.zeros((batch, K - 1, N), dtype),
+        conv_C=jnp.zeros((batch, K - 1, N), dtype),
+    )
+
+
+def _causal_conv(u: jax.Array, w: jax.Array,
+                 tail: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv via K shifted adds.  u: (B,S,C); w: (K,C)."""
+    K = w.shape[0]
+    if tail is None:
+        pad = jnp.zeros((u.shape[0], K - 1, u.shape[2]), u.dtype)
+    else:
+        pad = tail.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)           # (B, S+K-1, C)
+    S = u.shape[1]
+    out = jnp.zeros_like(u)
+    for j in range(K):
+        out = out + full[:, j:j + S, :] * w[j]
+    return out
+
+
+def _segsum(logd: jax.Array) -> jax.Array:
+    """L[i,j] = sum_{j<t<=i} logd_t for j<=i else -inf.  logd: (..., Q)."""
+    Q = logd.shape[-1]
+    cs = jnp.cumsum(logd, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]         # (..., Q, Q)
+    idx = jnp.arange(Q)
+    mask = idx[:, None] >= idx[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int,
+                state0: jax.Array | None = None):
+    """Chunked SSD.  x: (B,S,H,P); dt: (B,S,H); A: (H,) negative;
+    Bm, Cm: (B,S,N) (head-shared, G=1).  Returns (y, final_state)."""
+    Bb, S, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    if S % chunk:
+        raise ValueError(f"seq {S} % chunk {chunk} != 0")
+    nc = S // chunk
+
+    xr = jnp.moveaxis(x.reshape(Bb, nc, chunk, H, P), 1, 0)
+    dtr = jnp.moveaxis(dt.reshape(Bb, nc, chunk, H), 1, 0)
+    Br = jnp.moveaxis(Bm.reshape(Bb, nc, chunk, N), 1, 0)
+    Cr = jnp.moveaxis(Cm.reshape(Bb, nc, chunk, N), 1, 0)
+
+    if state0 is None:
+        state0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+
+    def body(state, inp):
+        xc, dtc, Bc, Cc = inp                # (B,Q,H,P), (B,Q,H), (B,Q,N)
+        dtc32 = dtc.astype(jnp.float32)
+        logd = dtc32 * A                      # (B,Q,H) negative
+        xdt = (xc.astype(jnp.float32) * dtc32[..., None])
+        # intra-chunk (dual/attention form)
+        Lseg = _segsum(jnp.moveaxis(logd, -1, 1))       # (B,H,Q,Q)
+        L = jnp.exp(Lseg)
+        scores = jnp.einsum("bqn,bkn->bqk", Cc.astype(jnp.float32),
+                            Bc.astype(jnp.float32))     # (B,Q,Q)
+        M_ = scores[:, None] * L                        # (B,H,Q,Q)
+        y_intra = jnp.einsum("bhqk,bkhp->bqhp", M_, xdt)
+        # inter-chunk: contribution of incoming state
+        cum = jnp.cumsum(logd, axis=1)                  # (B,Q,H)
+        decay_in = jnp.exp(cum)                         # decay from chunk start
+        y_inter = jnp.einsum("bqn,bhpn,bqh->bqhp",
+                             Cc.astype(jnp.float32), state, decay_in)
+        # state update
+        total = jnp.exp(cum[:, -1])                     # (B,H)
+        decay_out = jnp.exp(cum[:, -1][:, None] - cum)  # (B,Q,H)
+        chunk_state = jnp.einsum("bqhp,bqn,bqh->bhpn", xdt,
+                                 Bc.astype(jnp.float32), decay_out)
+        new_state = state * total[..., None, None] + chunk_state
+        return new_state, (y_intra + y_inter).astype(x.dtype)
+
+    final_state, ys = jax.lax.scan(body, state0, (xr, dtr, Br, Cr))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bb, S, H, P)
+    return y, final_state
+
+
+def ssd_decode_step(x: jax.Array, dt: jax.Array, A: jax.Array,
+                    Bm: jax.Array, Cm: jax.Array, state: jax.Array):
+    """One-token recurrence.  x: (B,H,P); dt: (B,H); Bm,Cm: (B,N);
+    state: (B,H,P,N) fp32.  Returns (y, new_state)."""
+    dt32 = dt.astype(jnp.float32)
+    dA = jnp.exp(dt32 * A)                               # (B,H)
+    xdt = x.astype(jnp.float32) * dt32[..., None]        # (B,H,P)
+    upd = jnp.einsum("bhp,bn->bhpn", xdt, Bm.astype(jnp.float32))
+    new_state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cm.astype(jnp.float32))
+    return y.astype(x.dtype), new_state
+
+
+# ----------------------------------------------------------------------
+def mamba_block(params: dict, u: jax.Array, cfg: ModelConfig, *,
+                cache: SSMCache | None = None):
+    """Full Mamba-2 block.  u: (B, S, M) → (out, new_cache_or_None)."""
+    Bb, S, M = u.shape
+    H, P, N, K = (cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state,
+                  cfg.ssm_conv)
+    z = jnp.einsum("bsm,md->bsd", u, params["w_z"])
+    x = jnp.einsum("bsm,md->bsd", u, params["w_x"])
+    Bm = jnp.einsum("bsm,mn->bsn", u, params["w_B"])
+    Cm = jnp.einsum("bsm,mn->bsn", u, params["w_C"])
+    dt_raw = jnp.einsum("bsm,mh->bsh", u, params["w_dt"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])                        # (H,) negative
+
+    if cache is not None and S == 1:
+        # conv via rolling buffers
+        cx = jnp.concatenate([cache.conv_x, x.astype(cache.conv_x.dtype)], 1)
+        cB = jnp.concatenate([cache.conv_B, Bm.astype(cache.conv_B.dtype)], 1)
+        cC = jnp.concatenate([cache.conv_C, Cm.astype(cache.conv_C.dtype)], 1)
+        xc = jnp.einsum("bkd,kd->bd", cx, params["conv_x"].astype(cx.dtype))
+        Bc = jnp.einsum("bkn,kn->bn", cB, params["conv_B"].astype(cB.dtype))
+        Cc = jnp.einsum("bkn,kn->bn", cC, params["conv_C"].astype(cC.dtype))
+        xa, Ba, Ca = silu(xc), silu(Bc), silu(Cc)
+        xh = xa.reshape(Bb, H, P)
+        y, new_state = ssd_decode_step(xh, dt[:, 0], A, Ba, Ca, cache.state)
+        y = y + params["D"][:, None] * xh.astype(jnp.float32)
+        y = y.reshape(Bb, 1, H * P)
+        new_cache = SSMCache(state=new_state, conv_x=cx[:, 1:],
+                             conv_B=cB[:, 1:], conv_C=cC[:, 1:])
+    else:
+        tail = (cache.conv_x, cache.conv_B, cache.conv_C) \
+            if cache is not None else (None, None, None)
+        xa = silu(_causal_conv(x, params["conv_x"].astype(x.dtype), tail[0]))
+        Ba = silu(_causal_conv(Bm, params["conv_B"].astype(Bm.dtype), tail[1]))
+        Ca = silu(_causal_conv(Cm, params["conv_C"].astype(Cm.dtype), tail[2]))
+        xh = xa.reshape(Bb, S, H, P)
+        state0 = cache.state if cache is not None else None
+        y, final_state = ssd_chunked(xh, dt, A, Ba, Ca,
+                                     chunk=min(cfg.q_chunk, 256),
+                                     state0=state0)
+        y = y + params["D"][None, None, :, None] * xh
+        y = y.reshape(Bb, S, H * P)
+        new_cache = None
+        if cache is not None:
+            new_cache = SSMCache(
+                state=final_state,
+                conv_x=x[:, -(K - 1):].astype(cache.conv_x.dtype),
+                conv_B=Bm[:, -(K - 1):].astype(cache.conv_B.dtype),
+                conv_C=Cm[:, -(K - 1):].astype(cache.conv_C.dtype))
+
+    y = y.astype(u.dtype)
+    y = rms_norm(y * silu(z), params["norm"])
+    out = jnp.einsum("bsd,dm->bsm", y, params["out_proj"])
+    return out.astype(u.dtype), new_cache

@@ -1,0 +1,10 @@
+"""Optimizers: sharded AdamW + schedules + gradient compression hooks."""
+
+from .adamw import (AdamWConfig, OptState, adamw_init, adamw_update,
+                    clip_by_global_norm, warmup_cosine)
+from .compress import (compress_gradients, decompress_gradients,
+                       CompressionConfig)
+
+__all__ = ["AdamWConfig", "OptState", "adamw_init", "adamw_update",
+           "clip_by_global_norm", "warmup_cosine",
+           "compress_gradients", "decompress_gradients", "CompressionConfig"]

@@ -1,0 +1,83 @@
+"""Gradient compression for the data-parallel axis (beyond-paper).
+
+Two schemes, both with deterministic behavior and an error-feedback
+residual so compression error does not accumulate:
+
+* ``int8`` — per-tensor symmetric quantization of gradients before the DP
+  all-reduce (4x fewer bytes on the wire; the roofline collective term of
+  the train cells drops proportionally — see EXPERIMENTS.md §Perf).
+* ``topk`` — keep the largest ``ratio`` fraction of entries per tensor
+  (magnitude sparsification), the rest carried in the residual.
+
+These are hooks: ``train_lib`` applies compress→(psum)→decompress around the
+gradient reduction when enabled.  On the dry-run they change the lowered
+collective byte counts, which is how their effect is measured here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CompressionConfig", "compress_gradients", "decompress_gradients"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    scheme: str = "none"          # "none" | "int8" | "topk"
+    topk_ratio: float = 0.01
+    error_feedback: bool = True
+
+
+def compress_gradients(grads, residual, cfg: CompressionConfig):
+    """→ (payload, new_residual).  payload is what crosses the DP axis."""
+    if cfg.scheme == "none":
+        return grads, residual
+
+    def one(g, r):
+        g32 = g.astype(jnp.float32)
+        if r is not None and cfg.error_feedback:
+            g32 = g32 + r.astype(jnp.float32)
+        if cfg.scheme == "int8":
+            scale = jnp.maximum(jnp.abs(g32).max(), 1e-12) / 127.0
+            q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+            approx = q.astype(jnp.float32) * scale
+            return (q, scale), g32 - approx
+        if cfg.scheme == "topk":
+            flat = g32.reshape(-1)
+            k = max(1, int(flat.size * cfg.topk_ratio))
+            vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+            kept = flat[idx]
+            approx = jnp.zeros_like(flat).at[idx].set(kept).reshape(g32.shape)
+            return (kept, idx, g32.shape), g32 - approx
+        raise ValueError(cfg.scheme)
+
+    if residual is None:
+        residual = jax.tree.map(lambda _: None, grads,
+                                is_leaf=lambda x: x is None)
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual) if jax.tree.leaves(residual) \
+        else [None] * len(flat_g)
+    pairs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    payload = treedef.unflatten([p for p, _ in pairs])
+    new_res = treedef.unflatten([r for _, r in pairs])
+    return payload, new_res
+
+
+def decompress_gradients(payload, cfg: CompressionConfig):
+    if cfg.scheme == "none":
+        return payload
+
+    def one(p):
+        if cfg.scheme == "int8":
+            q, scale = p
+            return q.astype(jnp.float32) * scale
+        kept, idx, shape = p
+        flat = jnp.zeros(int(jnp.prod(jnp.array(shape))), jnp.float32)
+        return flat.at[idx].set(kept).reshape(shape)
+
+    is_leaf = lambda x: isinstance(x, tuple) and not isinstance(x, dict)
+    return jax.tree.map(one, payload, is_leaf=is_leaf)

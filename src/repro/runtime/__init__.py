@@ -1,0 +1,7 @@
+"""Distributed runtime: train/serve step builders + DFlow orchestration."""
+
+from .train_lib import TrainState, build_train_step, make_train_state_specs
+from .serve_lib import build_decode_step, build_prefill_step, cache_specs
+
+__all__ = ["TrainState", "build_train_step", "make_train_state_specs",
+           "build_decode_step", "build_prefill_step", "cache_specs"]

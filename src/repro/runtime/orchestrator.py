@@ -1,0 +1,107 @@
+"""DFlow-orchestrated training: the paper's engine driving a JAX job.
+
+The training job is expressed as a *workflow DAG* and executed by the real
+threaded DFlow engine (:mod:`repro.core.dscheduler`):
+
+* ``batch.i``   — data-pipeline fetch for step *i* (no precursors);
+* ``step.i``    — train step: consumes ``state.{i-1}`` + ``batch.i``,
+  produces ``state.i`` (+ ``metrics.i``);
+* ``ckpt.k``    — checkpoint save consuming ``state.k`` (off the critical
+  path: runs whenever its datum is ready, the paper's async-Put pattern).
+
+Under the **dataflow** invocation pattern, ``step.i`` is launched while
+``step.{i-1}`` still runs; its container "prewarms" and its ``batch.i``
+fetch proceeds concurrently — the exact Figure-6 overlap, realized as
+host-side input staging that hides data latency behind device compute.
+Under the **controlflow** pattern (ablation), each step's fetch starts only
+after the previous step completes, putting data movement on the critical
+path.  ``test_orchestrator`` measures the difference with a throttled
+Transport.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+from ..core.dag import FunctionSpec, Workflow
+from ..core.dscheduler import DFlowEngine, RunReport
+from ..core.dstore import Transport
+
+__all__ = ["OrchestratorConfig", "build_training_workflow", "run_training"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OrchestratorConfig:
+    n_steps: int = 4
+    ckpt_every: int = 0               # 0 = no checkpoints
+    pattern: str = "dataflow"         # "dataflow" | "controlflow" ablation
+    n_nodes: int = 2
+    transport_bandwidth: float | None = None
+    straggler_factor: float | None = None
+
+
+def build_training_workflow(n_steps: int, *, fetch: Callable[[int], Any],
+                            train: Callable[[Any, Any], tuple],
+                            save: Callable[[int, Any], Any] | None = None,
+                            ckpt_every: int = 0,
+                            fetch_time: float = 0.05,
+                            step_time: float = 0.2) -> Workflow:
+    fns = []
+    for i in range(n_steps):
+        def mk_fetch(i=i):
+            def f():
+                return {f"batch.{i}": fetch(i)}
+            return f
+
+        fns.append(FunctionSpec(
+            name=f"fetch.{i}", inputs=(), outputs=(f"batch.{i}",),
+            fn=mk_fetch(), exec_time=fetch_time,
+            output_sizes={f"batch.{i}": 4 << 20}))
+
+        def mk_step(i=i):
+            def f(**kw):
+                state = kw[f"state.{i - 1}"] if i else kw["state.init"]
+                batch = kw[f"batch.{i}"]
+                new_state, metrics = train(state, batch)
+                return {f"state.{i}": new_state, f"metrics.{i}": metrics}
+            return f
+
+        prev = f"state.{i - 1}" if i else "state.init"
+        fns.append(FunctionSpec(
+            name=f"step.{i}", inputs=(prev, f"batch.{i}"),
+            outputs=(f"state.{i}", f"metrics.{i}"), fn=mk_step(),
+            exec_time=step_time,
+            output_sizes={f"state.{i}": 16 << 20,
+                          f"metrics.{i}": 1 << 10}))
+
+        if save is not None and ckpt_every and (i + 1) % ckpt_every == 0:
+            def mk_save(i=i):
+                def f(**kw):
+                    return {f"ckpt.{i}": save(i, kw[f"state.{i}"])}
+                return f
+            fns.append(FunctionSpec(
+                name=f"ckpt.{i}", inputs=(f"state.{i}",),
+                outputs=(f"ckpt.{i}",), fn=mk_save(), exec_time=0.05,
+                output_sizes={f"ckpt.{i}": 1 << 10}))
+
+    last = f"state.{n_steps - 1}"
+    fns.append(FunctionSpec(
+        name="emit", inputs=(last,), outputs=("final_state",),
+        fn=lambda **kw: {"final_state": kw[last]}, exec_time=0.0,
+        output_sizes={"final_state": 16 << 20}))
+    return Workflow("training", fns)
+
+
+def run_training(cfg: OrchestratorConfig, *, init_state: Any,
+                 fetch: Callable[[int], Any],
+                 train: Callable[[Any, Any], tuple],
+                 save: Callable[[int, Any], Any] | None = None) -> RunReport:
+    wf = build_training_workflow(cfg.n_steps, fetch=fetch, train=train,
+                                 save=save, ckpt_every=cfg.ckpt_every)
+    transport = Transport(bandwidth=cfg.transport_bandwidth)
+    engine = DFlowEngine(n_nodes=cfg.n_nodes, pattern=cfg.pattern,
+                         transport=transport,
+                         straggler_factor=cfg.straggler_factor)
+    return engine.run(wf, {"state.init": init_state})

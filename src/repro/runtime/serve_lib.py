@@ -1,0 +1,149 @@
+"""Serve-step builders: prefill + decode with sharded caches.
+
+Cache sharding (the serving analogue of DStore's locality design): batch
+over the data axes when divisible, the KV *sequence* axis over the model
+axis (each model-rank owns a contiguous KV span — XLA turns the softmax
+into the distributed flash-decode split-K pattern: local partial max/sum +
+tiny all-reduce of the stats, never an all-gather of the cache).  For
+long_500k (batch=1) the sequence axis takes *all* mesh axes.
+SSM states shard heads over the model axis (O(1) per sequence — why the
+long_500k cells are SSM/hybrid-only, see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+from ..sharding.context import data_axes, mesh_context, model_axis
+from ..sharding.rules import make_rules, spec_tree
+
+__all__ = ["cache_specs", "build_prefill_step", "build_decode_step",
+           "abstract_cache"]
+
+
+def _lead(axes):
+    return tuple(axes) if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def cache_specs(model, mesh: Mesh, batch: int, max_len: int):
+    """PartitionSpec tree matching model.init_cache's structure."""
+    cfg: ModelConfig = model.cfg
+    d = data_axes(mesh)
+    m = model_axis(mesh)
+    nd = 1
+    for a in d:
+        nd *= mesh.shape[a]
+    nm = mesh.shape[m] if m else 1
+
+    batch_ok = d and batch % nd == 0
+    b_ax = _lead(d) if batch_ok else None
+    if batch_ok:
+        seq_ax = m if (m and max_len % nm == 0) else None
+    else:
+        # batch unshardable (long_500k): give the sequence every axis.
+        all_ax = tuple(d) + ((m,) if m else ())
+        size = nd * nm
+        seq_ax = all_ax if (all_ax and max_len % size == 0) else (
+            m if (m and max_len % nm == 0) else None)
+
+    def kv_spec(shape_len: int):
+        # (L, B, S, Hk, D)
+        return P(None, b_ax, seq_ax, None, None)
+
+    def ssm_state_spec():
+        # (L, B, H, P, N) — heads over model
+        h_ax = m if (m and cfg.ssm_heads % nm == 0) else None
+        return P(None, b_ax, h_ax, None, None)
+
+    def conv_spec():
+        # (L, B, K-1, C)
+        return P(None, b_ax, None, None)
+
+    fam = cfg.family
+    from ..models.attention import KVCache
+    from ..models.lm import Cache
+    from ..models.ssm import SSMCache
+    if fam in ("dense", "vlm", "moe"):
+        return Cache(kv=KVCache(k=kv_spec(5), v=kv_spec(5), length=P(None)))
+    if fam == "ssm":
+        return Cache(ssm=SSMCache(state=ssm_state_spec(),
+                                  conv_x=conv_spec(), conv_B=conv_spec(),
+                                  conv_C=conv_spec()))
+    if fam == "hybrid":
+        # kv: (nb, B, S, Hk, D); ssm leaves: (nb, nm, B, ...)
+        h_ax = m if (m and cfg.ssm_heads % nm == 0) else None
+        return Cache(
+            kv=KVCache(k=kv_spec(5), v=kv_spec(5), length=P(None)),
+            ssm=SSMCache(state=P(None, None, b_ax, h_ax, None, None),
+                         conv_x=P(None, None, b_ax, None, None),
+                         conv_B=P(None, None, b_ax, None, None),
+                         conv_C=P(None, None, b_ax, None, None)))
+    if fam == "encdec":
+        from ..models.encdec import EncDecCache
+        return EncDecCache(
+            self_kv=KVCache(k=kv_spec(5), v=kv_spec(5), length=P(None)),
+            cross_k=P(None, b_ax, None, None, None),
+            cross_v=P(None, b_ax, None, None, None))
+    raise ValueError(fam)
+
+
+def abstract_cache(model, batch: int, max_len: int, *, filled: bool,
+                   memory_len: int | None = None):
+    """ShapeDtypeStruct cache tree (dry-run: no allocation)."""
+    if model.cfg.family == "encdec":
+        concrete = jax.eval_shape(
+            lambda: model.init_cache(batch, max_len, memory_len or 128))
+    else:
+        concrete = jax.eval_shape(lambda: model.init_cache(batch, max_len))
+    return concrete
+
+
+def build_prefill_step(model, mesh: Mesh, batch: int, seq: int,
+                       max_len: int | None = None, *, zero3: bool = False):
+    cfg = model.cfg
+    max_len = max_len or seq
+    rules = make_rules(mesh, zero3=zero3)
+    pspecs = spec_tree(model.param_decls(), mesh, rules)
+    cspecs = cache_specs(model, mesh, batch, max_len)
+    ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                                   is_leaf=lambda x: isinstance(x, P))
+
+    if cfg.family == "encdec":
+        def prefill(params, frames, tokens, cache):
+            with mesh_context(mesh):
+                return model.prefill(params, frames, tokens, cache)
+        return jax.jit(prefill,
+                       in_shardings=(ns(pspecs), None, None, ns(cspecs)),
+                       out_shardings=(None, ns(cspecs)),
+                       donate_argnums=(3,))
+
+    def prefill(params, tokens, cache):
+        with mesh_context(mesh):
+            return model.prefill(params, tokens, cache)
+    return jax.jit(prefill,
+                   in_shardings=(ns(pspecs), None, ns(cspecs)),
+                   out_shardings=(None, ns(cspecs)),
+                   donate_argnums=(2,))
+
+
+def build_decode_step(model, mesh: Mesh, batch: int, max_len: int, *,
+                      zero3: bool = False):
+    cfg = model.cfg
+    rules = make_rules(mesh, zero3=zero3)
+    pspecs = spec_tree(model.param_decls(), mesh, rules)
+    cspecs = cache_specs(model, mesh, batch, max_len)
+    ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                                   is_leaf=lambda x: isinstance(x, P))
+
+    def decode(params, token, cache):
+        with mesh_context(mesh):
+            return model.decode_step(params, token, cache)
+    return jax.jit(decode,
+                   in_shardings=(ns(pspecs), None, ns(cspecs)),
+                   out_shardings=(None, ns(cspecs)),
+                   donate_argnums=(2,))

@@ -1,0 +1,66 @@
+"""Current-mesh context — the "sharding directory" of the system.
+
+DESIGN.md maps DStore's *data directory service* (metadata describing where
+bytes live, separated from the bytes) onto this module plus
+:mod:`repro.sharding.rules`: a single process-wide source of truth that the
+model code (shard_map islands), the launcher, the checkpointer and the
+dry-run all consult to learn where every tensor lives.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh
+
+__all__ = ["set_current_mesh", "current_mesh", "mesh_context", "data_axes",
+           "model_axis", "axis_size"]
+
+_state = threading.local()
+
+
+def set_current_mesh(mesh: Mesh | None) -> None:
+    _state.mesh = mesh
+
+
+def current_mesh() -> Mesh:
+    mesh = getattr(_state, "mesh", None)
+    if mesh is None:
+        # Default: a 1x1 mesh over the first device so single-device smoke
+        # tests execute the exact distributed code path.
+        dev = jax.devices()[0]
+        import numpy as np
+
+        mesh = Mesh(np.array([dev]).reshape(1, 1), ("data", "model"))
+        _state.mesh = mesh
+    return mesh
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh):
+    prev = getattr(_state, "mesh", None)
+    set_current_mesh(mesh)
+    try:
+        yield mesh
+    finally:
+        set_current_mesh(prev)
+
+
+def data_axes(mesh: Mesh | None = None) -> tuple[str, ...]:
+    """Mesh axes that shard the batch: ('pod', 'data') when present."""
+    mesh = mesh or current_mesh()
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def model_axis(mesh: Mesh | None = None) -> str | None:
+    mesh = mesh or current_mesh()
+    return "model" if "model" in mesh.axis_names else None
+
+
+def axis_size(name: str, mesh: Mesh | None = None) -> int:
+    mesh = mesh or current_mesh()
+    if name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]

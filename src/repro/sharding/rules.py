@@ -1,0 +1,131 @@
+"""Logical-axis → mesh-axis rules (the sharding "directory").
+
+Parameters and activations carry *logical* axis names (see
+:mod:`repro.models.param`).  This module maps them onto the production mesh:
+
+====================  =======================================
+logical axis          mesh axes
+====================  =======================================
+batch                 ("pod", "data")  — whichever exist
+heads / kv_heads      "model"   (tensor parallel attention)
+mlp / expert_mlp      "model"   (tensor parallel FFN)
+experts               "model"   (expert parallel)
+vocab                 "model"   (sharded embedding + logits)
+ssm_heads             "model"   (Mamba head parallel)
+embed / seq / others  replicated (unless zero3/seq-parallel)
+====================  =======================================
+
+Every mapping is **divisibility-checked against the concrete dim**: a 40-head
+config on a 16-way model axis falls back to replicated heads (the attention
+einsums then shard on the contracting ``embed`` side instead), and a vocab of
+50280 stays unsharded.  This is what lets one rule set drive all 10
+architectures through the same dry-run.
+
+``zero3=True`` additionally shards each parameter's largest remaining axis
+over the data axes (FSDP-style) — a §Perf hillclimb lever.
+"""
+
+from __future__ import annotations
+
+from typing import Mapping
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.param import ArrayDecl
+from .context import data_axes, model_axis
+
+__all__ = ["make_rules", "logical_to_spec", "spec_tree", "sharding_tree",
+           "batch_spec"]
+
+_MODEL_AXES = ("heads", "kv_heads", "mlp", "expert_mlp", "experts", "vocab",
+               "ssm_heads", "ssm_inner")
+
+
+def make_rules(mesh: Mesh, *, zero3: bool = False,
+               seq_parallel: bool = False, dp_only: bool = False) -> dict:
+    d = data_axes(mesh)
+    m = model_axis(mesh)
+    if dp_only:
+        # Small-arch remap: the model axis becomes extra data parallelism;
+        # parameters are fully replicated (§Perf lever).
+        rules: dict[str, tuple[str, ...] | None] = {a: None
+                                                    for a in _MODEL_AXES}
+        rules["heads"] = None
+        rules["batch"] = (d + ((m,) if m else ())) or None
+        rules["seq"] = None
+        rules["_zero3"] = (d + ((m,) if m else ())) if zero3 else None
+        return rules
+    rules = {a: (m,) if m else None for a in _MODEL_AXES}
+    rules["batch"] = d or None
+    rules["seq"] = (m,) if (seq_parallel and m) else None
+    rules["_zero3"] = d if zero3 else None
+    return rules
+
+
+def _fits(dim: int, axes: tuple[str, ...] | None, mesh: Mesh) -> bool:
+    if not axes:
+        return False
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return dim % size == 0 and dim >= size
+
+
+def logical_to_spec(axes: tuple[str | None, ...], shape: tuple[int, ...],
+                    rules: Mapping, mesh: Mesh) -> P:
+    """One array's logical axes + shape → PartitionSpec."""
+    parts: list = []
+    used: set[str] = set()
+    for dim, name in zip(shape, axes):
+        target = rules.get(name) if name else None
+        if target and not any(t in used for t in target) \
+                and _fits(dim, tuple(target), mesh):
+            parts.append(tuple(target) if len(target) > 1 else target[0])
+            used.update(target)
+        else:
+            parts.append(None)
+    # Fallback for arrays with a *q-heads* axis only (wq/wo): if the model
+    # axis could not be used, shard head_dim instead.  Never applied to
+    # K/V projections — those stay model-replicated (GQA KV is small), so
+    # the expand-to-H broadcast remains local.
+    m = rules.get("heads")
+    if m and "heads" in axes \
+            and not any((set(m) & ({p} if isinstance(p, str)
+                                   else set(p or ()))) for p in parts):
+        for i, name in enumerate(axes):
+            if name == "head_dim" and parts[i] is None \
+                    and _fits(shape[i], tuple(m), mesh):
+                parts[i] = tuple(m) if len(m) > 1 else m[0]
+                break
+    # ZeRO-3: shard the largest still-replicated axis over the data axes.
+    zaxes = rules.get("_zero3")
+    if zaxes and not any(set(zaxes) & ({p} if isinstance(p, str)
+                                       else set(p or ())) for p in parts):
+        order = sorted(range(len(shape)), key=lambda i: -shape[i])
+        for i in order:
+            if parts[i] is None and _fits(shape[i], tuple(zaxes), mesh) \
+                    and axes[i] != "layers":
+                parts[i] = tuple(zaxes) if len(zaxes) > 1 else zaxes[0]
+                break
+    return P(*parts)
+
+
+def spec_tree(decls, mesh: Mesh, rules: Mapping):
+    """Pytree of PartitionSpec matching a pytree of ArrayDecl."""
+    return jax.tree.map(
+        lambda d: logical_to_spec(d.axes, d.shape, rules, mesh),
+        decls, is_leaf=lambda x: isinstance(x, ArrayDecl))
+
+
+def sharding_tree(decls, mesh: Mesh, rules: Mapping):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        spec_tree(decls, mesh, rules),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(mesh: Mesh, ndim: int = 2) -> P:
+    """Inputs (batch, seq, ...): batch over the data axes."""
+    d = data_axes(mesh)
+    lead = tuple(d) if len(d) > 1 else (d[0] if d else None)
+    return P(lead, *([None] * (ndim - 1)))

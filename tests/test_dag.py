@@ -1,0 +1,96 @@
+"""Workflow DAG model + parser tests."""
+
+import pytest
+
+from repro.core.dag import FunctionSpec, Workflow, parse_size, parse_workflow
+
+
+def test_parse_size():
+    assert parse_size("8MB") == 8 << 20
+    assert parse_size("2KB") == 2048
+    assert parse_size("1.5GB") == int(1.5 * (1 << 30))
+    assert parse_size(123) == 123
+    with pytest.raises(ValueError):
+        parse_size("eight megs")
+
+
+def _diamond():
+    return Workflow("d", [
+        FunctionSpec("a", inputs=("x",), outputs=("a1", "a2")),
+        FunctionSpec("b", inputs=("a1",), outputs=("b1",)),
+        FunctionSpec("c", inputs=("a2",), outputs=("c1",)),
+        FunctionSpec("d", inputs=("b1", "c1"), outputs=("y",)),
+    ])
+
+
+def test_dag_derivations():
+    wf = _diamond()
+    assert wf.entry_points == ("a",)
+    assert wf.exit_points == ("d",)
+    assert set(wf.successors["a"]) == {"b", "c"}
+    assert set(wf.predecessors["d"]) == {"b", "c"}
+    assert wf.topo_order.index("a") < wf.topo_order.index("d")
+    assert wf.external_inputs == {"x": 1 << 20}
+
+
+def test_cycle_detection():
+    with pytest.raises(ValueError, match="cycle"):
+        Workflow("bad", [
+            FunctionSpec("a", inputs=("u",), outputs=("v",)),
+            FunctionSpec("b", inputs=("v",), outputs=("u",)),
+        ])
+
+
+def test_duplicate_producer_rejected():
+    with pytest.raises(ValueError, match="immutable"):
+        Workflow("bad", [
+            FunctionSpec("a", outputs=("k",)),
+            FunctionSpec("b", outputs=("k",)),
+        ])
+
+
+def test_parse_workflow_foreach_and_glob():
+    doc = {
+        "name": "wc",
+        "functions": {
+            "split": {"inputs": ["corpus"], "outputs": ["shard.0", "shard.1"],
+                      "exec_time": 0.5,
+                      "output_sizes": {"shard.0": "8MB", "shard.1": "8MB"}},
+            "count": {"foreach": 2, "inputs": ["shard.$i"],
+                      "outputs": ["wc.$i"], "exec_time": 1.0},
+            "merge": {"inputs": ["wc.*"], "outputs": ["result"]},
+        },
+    }
+    wf = parse_workflow(doc)
+    assert set(wf.functions) == {"split", "count.0", "count.1", "merge"}
+    assert wf.functions["merge"].inputs == ("wc.0", "wc.1")
+    assert wf.functions["split"].size_of("shard.0") == 8 << 20
+    assert wf.entry_points == ("split",)
+
+
+def test_parse_workflow_yaml_text():
+    text = """
+name: tiny
+functions:
+  a:
+    inputs: [x]
+    outputs: [y]
+    exec_time: 0.1
+  b:
+    inputs: [y]
+    outputs: [z]
+"""
+    wf = parse_workflow(text)
+    assert wf.topo_order == ("a", "b")
+
+
+def test_critical_path():
+    wf = _diamond()
+    wf2 = Workflow("d", [
+        FunctionSpec("a", inputs=("x",), outputs=("a1", "a2"), exec_time=1.0),
+        FunctionSpec("b", inputs=("a1",), outputs=("b1",), exec_time=5.0),
+        FunctionSpec("c", inputs=("a2",), outputs=("c1",), exec_time=1.0),
+        FunctionSpec("d", inputs=("b1", "c1"), outputs=("y",), exec_time=1.0),
+    ])
+    assert wf2.critical_path_time() == pytest.approx(7.0)
+    assert wf2.total_exec_time() == pytest.approx(8.0)

@@ -1,0 +1,113 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
+(interpret mode executes the kernel bodies on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.decode_attention import (decode_attention,
+                                            decode_attention_ref)
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd import ssd
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _tol(dtype):
+    return TOL[jnp.bfloat16 if dtype == jnp.bfloat16 else jnp.float32]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("B,S,H,Hk,D,bq,bk", [
+    (1, 32, 2, 2, 16, 16, 16),      # MHA
+    (2, 64, 4, 2, 32, 32, 32),      # GQA group 2
+    (1, 128, 8, 2, 64, 64, 32),     # GQA group 4, rectangular blocks
+    (1, 64, 6, 1, 32, 16, 64),      # MQA-ish, bk > bq
+])
+def test_flash_attention_sweep(dtype, causal, B, S, H, Hk, D, bq, bk):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, Hk, D)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, Hk, D)).astype(dtype)
+    got = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk,
+                          interpret=True)
+    ref = flash_attention(q, k, v, causal=causal, use_kernel=False)
+    err = float(jnp.abs(got.astype(jnp.float32)
+                        - ref.astype(jnp.float32)).max())
+    assert err < _tol(dtype), err
+
+
+def test_flash_attention_rejects_bad_blocks():
+    q = jnp.zeros((1, 30, 2, 16))
+    k = v = jnp.zeros((1, 30, 2, 16))
+    with pytest.raises(ValueError, match="divisible"):
+        flash_attention(q, k, v, block_q=16, block_k=16, interpret=True)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("used", [1, 63, 128, 256])
+@pytest.mark.parametrize("B,H,Hk,D,L,bk", [
+    (2, 8, 2, 32, 256, 64),
+    (1, 4, 4, 16, 256, 128),        # MHA
+    (3, 6, 1, 64, 256, 256),        # MQA, single block
+])
+def test_decode_attention_sweep(dtype, used, B, H, Hk, D, L, bk):
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, D)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, L, Hk, D)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, L, Hk, D)).astype(dtype)
+    got = decode_attention(q, k, v, jnp.int32(used), block_k=bk,
+                           interpret=True)
+    ref = decode_attention(q, k, v, jnp.int32(used), use_kernel=False)
+    err = float(jnp.abs(got.astype(jnp.float32)
+                        - ref.astype(jnp.float32)).max())
+    assert err < _tol(dtype), (used, err)
+
+
+def test_decode_attention_ignores_stale_tail():
+    """Garbage beyond `length` must not leak into the output."""
+    ks = jax.random.split(jax.random.key(2), 3)
+    q = jax.random.normal(ks[0], (1, 1, 4, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 64, 2, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 64, 2, 16), jnp.float32)
+    k_dirty = k.at[:, 40:].set(1e4)
+    v_dirty = v.at[:, 40:].set(-1e4)
+    a = decode_attention(q, k, v, jnp.int32(40), block_k=32, interpret=True)
+    b = decode_attention(q, k_dirty, v_dirty, jnp.int32(40), block_k=32,
+                         interpret=True)
+    assert jnp.allclose(a, b, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (1, 32, 2, 8, 16, 16),
+    (2, 64, 4, 16, 32, 32),
+    (1, 128, 8, 64, 128, 64),       # full-size head dims (mamba2-370m)
+    (2, 64, 4, 16, 32, 64),         # one chunk == S? no: 64
+])
+def test_ssd_sweep(dtype, B, S, H, P, N, chunk):
+    ks = jax.random.split(jax.random.key(3), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P)).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, N)).astype(dtype)
+    Cm = jax.random.normal(ks[4], (B, S, N)).astype(dtype)
+    got = ssd(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    ref = ssd(x, dt, A, Bm, Cm, chunk=chunk, use_kernel=False)
+    rel = float(jnp.abs(got.astype(jnp.float32) - ref.astype(jnp.float32))
+                .max() / (jnp.abs(ref.astype(jnp.float32)).max() + 1e-9))
+    assert rel < _tol(dtype) * 5, rel
+
+
+def test_ssd_long_context_stability():
+    """Decaying state over many chunks: no NaN/Inf, bounded output."""
+    B, S, H, P, N = 1, 512, 2, 8, 16
+    ks = jax.random.split(jax.random.key(4), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, N), jnp.float32)
+    Cm = jax.random.normal(ks[4], (B, S, N), jnp.float32)
+    y = ssd(x, dt, A, Bm, Cm, chunk=64, interpret=True)
+    assert bool(jnp.all(jnp.isfinite(y)))

@@ -1,0 +1,88 @@
+"""GS partitioner tests incl. hypothesis property tests on random DAGs."""
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.dag import FunctionSpec, Workflow
+from repro.core.partition import cut_bytes, partition_workflow
+from repro.core.workloads import BENCHMARKS
+
+
+def test_chain_collocates():
+    """A pure chain should land entirely on one node (zero cut)."""
+    fns = []
+    prev = "x"
+    for i in range(5):
+        out = f"k{i}"
+        fns.append(FunctionSpec(f"f{i}", inputs=(prev,), outputs=(out,),
+                                exec_time=0.1,
+                                output_sizes={out: 10 << 20}))
+        prev = out
+    wf = Workflow("chain", fns)
+    pl = partition_workflow(wf, ["n1", "n2", "n3"])
+    assert cut_bytes(wf, pl) == 0.0
+
+
+def test_balance_cap_respected():
+    """Load on any node should not exceed slack * total / n."""
+    fns = [FunctionSpec(f"f{i}", inputs=(), outputs=(f"o{i}",),
+                        exec_time=1.0) for i in range(12)]
+    wf = Workflow("wide", fns)
+    nodes = ["a", "b", "c"]
+    pl = partition_workflow(wf, nodes, balance_slack=1.35)
+    load = {n: 0.0 for n in nodes}
+    for f, n in pl.items():
+        load[n] += wf.functions[f].exec_time
+    cap = 1.35 * 12 / 3
+    assert all(v <= cap + 1e-9 for v in load.values())
+
+
+def _random_layered_dag(draw):
+    n_layers = draw(st.integers(2, 4))
+    width = draw(st.integers(1, 4))
+    fns = []
+    prev_keys: list[str] = []
+    for layer in range(n_layers):
+        keys = []
+        for j in range(width):
+            name = f"f{layer}_{j}"
+            out = f"k{layer}_{j}"
+            if layer == 0:
+                ins = ("src",)
+            else:
+                picks = draw(st.lists(
+                    st.sampled_from(prev_keys), min_size=1,
+                    max_size=min(3, len(prev_keys)), unique=True))
+                ins = tuple(picks)
+            sz = draw(st.integers(1, 32)) << 20
+            fns.append(FunctionSpec(name, inputs=ins, outputs=(out,),
+                                    exec_time=draw(st.floats(0.01, 2.0)),
+                                    output_sizes={out: sz}))
+            keys.append(out)
+        prev_keys = keys
+    return Workflow("rand", fns)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_partition_properties_random_dags(data):
+    wf = _random_layered_dag(data.draw)
+    nodes = [f"n{i}" for i in range(data.draw(st.integers(1, 5)))]
+    pl = partition_workflow(wf, nodes)
+    # Every function placed, onto a known node.
+    assert set(pl) == set(wf.functions)
+    assert set(pl.values()) <= set(nodes)
+    # Refinement never does worse than all-on-one-node for a single node.
+    if len(nodes) == 1:
+        assert cut_bytes(wf, pl) == 0.0
+
+
+def test_benchmarks_cut_below_total():
+    nodes = [f"node{i+1}" for i in range(7)]
+    for name, gen in BENCHMARKS.items():
+        wf = gen()
+        pl = partition_workflow(wf, nodes)
+        total = sum(wf.functions[p].size_of(k)
+                    for f in wf.functions.values() for k in f.inputs
+                    for p in [wf.producer.get(k)] if p and p != f.name)
+        assert cut_bytes(wf, pl) < total, name

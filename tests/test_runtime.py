@@ -1,0 +1,168 @@
+"""Runtime tests: sharded train step, serving builders, orchestrator,
+checkpoint/restart fault tolerance, elastic restore."""
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.mesh import make_local_mesh
+from repro.models import build_model, init_params
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.orchestrator import OrchestratorConfig, run_training
+from repro.runtime.train_lib import (build_train_step, init_train_state,
+                                     make_train_state_specs)
+from repro.sharding.context import mesh_context
+from repro.sharding.rules import make_rules, spec_tree
+
+
+def _toy_model():
+    cfg = get_config("tinyllama-1.1b", reduced=True)
+    cfg = dataclasses.replace(cfg, q_chunk=16, kv_chunk=16)
+    return build_model(cfg)
+
+
+def test_train_step_runs_and_descends():
+    model = _toy_model()
+    mesh = make_local_mesh()
+    opt = AdamWConfig(lr=5e-3, warmup_steps=2, total_steps=50)
+    with mesh_context(mesh):
+        step, _ = build_train_step(model, mesh, opt)
+        state = init_train_state(model, mesh, opt)
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(
+            rng.integers(0, model.cfg.vocab, (4, 33)), jnp.int32)}
+        losses = []
+        for _ in range(8):
+            state, metrics = step(state, batch)
+            losses.append(float(metrics["loss"]))
+        assert losses[-1] < losses[0]          # memorizes a fixed batch
+        assert int(state.opt.step) == 8
+
+
+def test_train_step_microbatched_matches_full():
+    """Grad accumulation must match the single-batch gradient step."""
+    model = _toy_model()
+    mesh = make_local_mesh()
+    opt = AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=10,
+                      weight_decay=0.0)
+    rng = np.random.default_rng(1)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, model.cfg.vocab, (4, 33)), jnp.int32)}
+    with mesh_context(mesh):
+        state0 = init_train_state(model, mesh, opt)
+        step1, _ = build_train_step(model, mesh, opt, donate=False)
+        s1, m1 = step1(state0, batch)
+
+        model2 = build_model(dataclasses.replace(model.cfg, microbatches=2))
+        step2, _ = build_train_step(model2, mesh, opt, donate=False)
+        s2, m2 = step2(state0, batch)
+    # losses equal (mean over microbatches of a homogeneous batch split)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=5e-2)
+    w1 = jax.tree.leaves(s1.params)[0]
+    w2 = jax.tree.leaves(s2.params)[0]
+    assert jnp.allclose(w1.astype(jnp.float32), w2.astype(jnp.float32),
+                        atol=1e-2)
+
+
+def test_state_specs_cover_all_leaves():
+    model = _toy_model()
+    mesh = make_local_mesh()
+    specs = make_train_state_specs(model, mesh)
+    n_param_leaves = len(jax.tree.leaves(
+        init_params(model.param_decls(), jax.random.key(0))))
+    from jax.sharding import PartitionSpec
+    n_spec_leaves = len(jax.tree.leaves(
+        specs.params, is_leaf=lambda x: isinstance(x, PartitionSpec)))
+    assert n_param_leaves == n_spec_leaves
+
+
+def test_checkpoint_restart_reproduces_trajectory(tmp_path):
+    """Crash + resume must land on the same losses (fault tolerance)."""
+    from repro.launch.train import train_loop
+    out_full = train_loop("tinyllama-1.1b", steps=6, batch=2, seq=32,
+                          log_every=0, seed=3)
+    with pytest.raises(RuntimeError, match="simulated"):
+        train_loop("tinyllama-1.1b", steps=6, batch=2, seq=32,
+                   ckpt_dir=str(tmp_path), ckpt_every=2, log_every=0,
+                   simulate_failure=4, seed=3)
+    out_resumed = train_loop("tinyllama-1.1b", steps=6, batch=2, seq=32,
+                             ckpt_dir=str(tmp_path), ckpt_every=2,
+                             resume=True, log_every=0, seed=3)
+    assert out_resumed["start_step"] == 4
+    np.testing.assert_allclose(out_full["losses"][4:],
+                               out_resumed["losses"], rtol=2e-2)
+
+
+def test_elastic_restore_across_mesh_shapes(tmp_path):
+    """A checkpoint saved on one mesh restores onto another (elastic)."""
+    from repro.checkpoint import CheckpointManager
+    from jax.sharding import NamedSharding
+    model = _toy_model()
+    opt = AdamWConfig()
+    mesh1 = make_local_mesh(data=1, model=1)
+    with mesh_context(mesh1):
+        state = init_train_state(model, mesh1, opt)
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    mgr.save(1, state)
+    # "new cluster": same device count here, but restore goes through the
+    # topology-agnostic path with explicit new-mesh shardings.
+    mesh2 = make_local_mesh(data=1, model=1)
+    specs = make_train_state_specs(model, mesh2)
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh2, s), specs,
+                             is_leaf=lambda x: hasattr(x, "_normalized_spec")
+                             or type(x).__name__ == "PartitionSpec")
+    restored, step = mgr.restore(state, shardings=shardings)
+    assert step == 1
+    a = jax.tree.leaves(state.params)[0]
+    b = jax.tree.leaves(restored.params)[0]
+    assert jnp.allclose(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------- orchestrator
+def test_orchestrator_runs_training_dag():
+    log = []
+
+    def fetch(i):
+        return np.full((2, 2), i, np.float32)
+
+    def train(state, batch):
+        new_state = state + batch.sum()
+        log.append(float(new_state))
+        return new_state, {"loss": float(new_state)}
+
+    saves = []
+    cfg = OrchestratorConfig(n_steps=4, ckpt_every=2, pattern="dataflow")
+    rep = run_training(cfg, init_state=np.float32(0.0), fetch=fetch,
+                       train=train, save=lambda i, s: saves.append((i, s)))
+    # final state = sum of batch sums 0+4+8+12
+    assert rep.outputs["final_state"] == pytest.approx(24.0)
+    assert [i for i, _ in saves] == [1, 3]
+    assert len(rep.per_function) == 4 + 4 + 2 + 1  # fetch + step + ckpt + emit
+
+
+def test_orchestrator_dataflow_overlaps_fetch():
+    """With a slow transport, dataflow (prefetch overlap) beats controlflow."""
+    def fetch(i):
+        time.sleep(0.05)
+        return np.ones((64, 64), np.float32)   # 16 KB payload
+
+    def train(state, batch):
+        time.sleep(0.05)
+        return state + float(batch.mean()), {}
+
+    times = {}
+    for pattern in ("dataflow", "controlflow"):
+        cfg = OrchestratorConfig(n_steps=5, pattern=pattern,
+                                 transport_bandwidth=2e6)
+        t0 = time.monotonic()
+        rep = run_training(cfg, init_state=np.float32(0.0), fetch=fetch,
+                           train=train)
+        times[pattern] = time.monotonic() - t0
+        assert rep.outputs["final_state"] == pytest.approx(5.0)
+    # dataflow must not be slower; usually clearly faster.
+    assert times["dataflow"] <= times["controlflow"] * 1.1

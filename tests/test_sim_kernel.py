@@ -1,0 +1,128 @@
+"""Discrete-event kernel tests: clock, processes, resources, max-min net."""
+
+import pytest
+
+from repro.core.sim import Env, Network, Resource, all_of
+
+
+def test_timeout_ordering():
+    env = Env()
+    seen = []
+
+    def p(name, delay):
+        yield env.timeout(delay)
+        seen.append((name, env.now))
+    env.process(p("b", 2.0))
+    env.process(p("a", 1.0))
+    env.run()
+    assert seen == [("a", 1.0), ("b", 2.0)]
+
+
+def test_process_return_value_and_all_of():
+    env = Env()
+
+    def inner(v):
+        yield env.timeout(v)
+        return v * 10
+
+    def outer():
+        vals = yield all_of(env, [env.process(inner(1)),
+                                  env.process(inner(2))])
+        return vals
+    p = env.process(outer())
+    env.run()
+    assert p.value == [10, 20]
+    assert env.now == 2.0
+
+
+def test_resource_fifo_and_capacity():
+    env = Env()
+    order = []
+
+    def worker(i):
+        yield res.acquire()
+        order.append(("start", i, env.now))
+        yield env.timeout(1.0)
+        res.release()
+    res = Resource(env, capacity=2)
+    for i in range(4):
+        env.process(worker(i))
+    env.run()
+    starts = [t for (_, _, t) in order]
+    assert starts == [0.0, 0.0, 1.0, 1.0]
+
+
+def test_network_single_flow_rate():
+    env = Env()
+    net = Network(env, uplink={"a": 100.0, "b": 100.0},
+                  downlink={"a": 100.0, "b": 100.0}, latency=0.0)
+    done = net.transfer("a", "b", 200.0)
+    env.run()
+    assert done.triggered
+    assert env.now == pytest.approx(2.0)   # 200 B at 100 B/s
+
+
+def test_network_maxmin_sharing():
+    """Two flows into one receiver share its downlink fairly."""
+    env = Env()
+    net = Network(env, uplink={"a": 100.0, "b": 100.0, "c": 100.0},
+                  downlink={"a": 100.0, "b": 100.0, "c": 100.0}, latency=0.0)
+    t = {}
+
+    def run_flow(src, size, key):
+        yield net.transfer(src, "c", size)
+        t[key] = env.now
+    env.process(run_flow("a", 100.0, "a"))
+    env.process(run_flow("b", 100.0, "b"))
+    env.run()
+    # Both at 50 B/s until 2.0 — both finish at 2.0 (fair share).
+    assert t["a"] == pytest.approx(2.0)
+    assert t["b"] == pytest.approx(2.0)
+
+
+def test_network_residual_speedup():
+    """When one flow finishes, the survivor picks up the freed bandwidth."""
+    env = Env()
+    net = Network(env, uplink={"a": 100.0, "b": 100.0, "c": 100.0},
+                  downlink={"a": 100.0, "b": 100.0, "c": 100.0}, latency=0.0)
+    t = {}
+
+    def run_flow(src, size, key):
+        yield net.transfer(src, "c", size)
+        t[key] = env.now
+    env.process(run_flow("a", 50.0, "a"))    # finishes at 1.0 (50 @ 50 B/s)
+    env.process(run_flow("b", 150.0, "b"))   # 50 @ 50 then 100 @ 100 -> 2.0
+    env.run()
+    assert t["a"] == pytest.approx(1.0)
+    assert t["b"] == pytest.approx(2.0)
+
+
+def test_network_distinct_receivers_full_rate():
+    env = Env()
+    net = Network(env, uplink={"a": 100.0, "b": 100.0, "c": 100.0, "d": 100.0},
+                  downlink={"a": 100.0, "b": 100.0, "c": 100.0, "d": 100.0},
+                  latency=0.0)
+    t = {}
+
+    def run_flow(src, dst, key):
+        yield net.transfer(src, dst, 100.0)
+        t[key] = env.now
+    env.process(run_flow("a", "c", "ac"))
+    env.process(run_flow("b", "d", "bd"))
+    env.run()
+    assert t["ac"] == pytest.approx(1.0)     # no shared link => full rate
+    assert t["bd"] == pytest.approx(1.0)
+
+
+def test_network_busy_time_union():
+    env = Env()
+    net = Network(env, uplink={"a": 100.0, "b": 100.0},
+                  downlink={"a": 100.0, "b": 100.0}, latency=0.0)
+
+    def seq():
+        yield net.transfer("a", "b", 100.0)      # busy [0,1]
+        yield env.timeout(5.0)                    # idle  (1,6)
+        yield net.transfer("a", "b", 200.0)      # busy [6,8]
+    env.process(seq())
+    env.run()
+    assert net.busy_time == pytest.approx(3.0)

@@ -1,0 +1,150 @@
+"""Substrate tests: optimizer, data pipeline, checkpointing, compression."""
+
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, latest_step, save_state
+from repro.checkpoint.ckpt import restore_state
+from repro.data import DataConfig, Prefetcher, SyntheticLM
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               clip_by_global_norm, warmup_cosine)
+from repro.optim.compress import (CompressionConfig, compress_gradients,
+                                  decompress_gradients)
+
+
+# ---------------------------------------------------------------- optimizer
+def test_warmup_cosine_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(warmup_cosine(cfg, jnp.asarray(s))) for s in range(100)]
+    assert lrs[0] == pytest.approx(0.0)
+    assert lrs[10] == pytest.approx(1.0, abs=0.1)
+    assert lrs[99] < 0.2
+    assert max(lrs) <= 1.0 + 1e-6
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((10,)) * 10.0}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert float(gn) == pytest.approx(10.0 * np.sqrt(10), rel=1e-5)
+    norm_after = float(jnp.linalg.norm(clipped["a"]))
+    assert norm_after == pytest.approx(1.0, rel=1e-5)
+
+
+def test_adamw_reduces_quadratic_loss():
+    cfg = AdamWConfig(lr=0.1, warmup_steps=1, total_steps=100,
+                      weight_decay=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adamw_init(params, cfg)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+    l0 = float(loss(params))
+    for _ in range(50):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(params, g, state, cfg)
+    assert float(loss(params)) < 0.1 * l0
+    assert int(state.step) == 50
+
+
+def test_adamw_no_decay_on_norms():
+    cfg = AdamWConfig(lr=0.0, weight_decay=1.0, warmup_steps=0,
+                      total_steps=10)
+    params = {"w": jnp.ones(4), "ln1": jnp.ones(4)}
+    g = jax.tree.map(jnp.zeros_like, params)
+    state = adamw_init(params, cfg)
+    new_params, *_ = adamw_update(params, g, state, cfg)
+    # lr=0 => no update at all; decay applies inside the lr-scaled update,
+    # so both stay identical here — check the path selector directly.
+    from repro.optim.adamw import _no_decay
+    assert _no_decay(("layers", "ln1"))
+    assert _no_decay(("layers", "attn", "q_norm"))
+    assert not _no_decay(("layers", "attn", "wq"))
+
+
+# ---------------------------------------------------------------- data
+def test_synthetic_batch_deterministic_by_step():
+    cfg = DataConfig(vocab=128, seq_len=16, global_batch=4, seed=7)
+    src = SyntheticLM(cfg)
+    a = src.batch_at(3)["tokens"]
+    b = src.batch_at(3)["tokens"]
+    c = src.batch_at(4)["tokens"]
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, c)
+    assert a.shape == (4, 17)
+    assert a.min() >= 0 and a.max() < 128
+
+
+def test_prefetcher_order_and_restart():
+    cfg = DataConfig(vocab=64, seq_len=8, global_batch=2, seed=1)
+    src = SyntheticLM(cfg)
+    pf = Prefetcher(src, start_step=5, depth=2)
+    steps = [pf.next()[0] for _ in range(3)]
+    pf.close()
+    assert steps == [5, 6, 7]
+    pf2 = Prefetcher(src, start_step=6, depth=2)
+    s, batch = pf2.next()
+    pf2.close()
+    assert s == 6
+    assert np.array_equal(batch["tokens"], src.batch_at(6)["tokens"])
+
+
+# ---------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    state = {"params": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)},
+             "step": jnp.asarray(7)}
+    save_state(tmp_path, 7, state)
+    assert latest_step(tmp_path) == 7
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), state)
+    restored = restore_state(tmp_path, 7, like)
+    assert np.array_equal(np.asarray(restored["params"]["w"]),
+                          np.arange(6, dtype=np.float32).reshape(2, 3))
+
+
+def test_checkpoint_manager_gc_and_async(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2, async_save=True)
+    state = {"w": jnp.ones(3)}
+    for s in (1, 2, 3):
+        mgr.save(s, state)
+    mgr.wait()
+    steps = sorted(int(p.name.split("_")[1]) for p in tmp_path.iterdir()
+                   if p.name.startswith("step_"))
+    assert steps == [2, 3]
+    restored, step = mgr.restore({"w": jnp.zeros(3)})
+    assert step == 3
+
+
+def test_checkpoint_restore_respects_dtype(tmp_path):
+    state = {"w": jnp.ones(4, jnp.float32)}
+    save_state(tmp_path, 1, state)
+    like = {"w": jnp.zeros(4, jnp.bfloat16)}
+    restored = restore_state(tmp_path, 1, like)
+    assert restored["w"].dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------- compression
+@pytest.mark.parametrize("scheme", ["int8", "topk"])
+def test_compression_roundtrip_error_feedback(scheme):
+    cfg = CompressionConfig(scheme=scheme, topk_ratio=0.25)
+    g = {"w": jnp.asarray(np.random.default_rng(0)
+                          .normal(size=(32, 8)).astype(np.float32))}
+    payload, residual = compress_gradients(g, None, cfg)
+    approx = decompress_gradients(payload, cfg)
+    err1 = float(jnp.abs(approx["w"] - g["w"]).mean())
+    # feeding the residual back must reduce accumulated error over rounds
+    payload2, residual2 = compress_gradients(g, residual, cfg)
+    approx2 = decompress_gradients(payload2, cfg)
+    total2 = approx["w"] + approx2["w"]
+    err2 = float(jnp.abs(total2 - 2 * g["w"]).mean())
+    assert err2 < 2 * err1 + 1e-6          # error does not accumulate
+
+
+def test_int8_payload_is_int8():
+    cfg = CompressionConfig(scheme="int8")
+    g = {"w": jnp.ones((16,), jnp.float32)}
+    payload, _ = compress_gradients(g, None, cfg)
+    q, scale = payload["w"]
+    assert q.dtype == jnp.int8
