@@ -5,6 +5,8 @@ Layers:
 * :mod:`repro.core.dag`          — workflow DAG model + parser.
 * :mod:`repro.core.partition`    — Global-Scheduler DAG partitioning.
 * :mod:`repro.core.dstore`       — real threaded DStore (Table 1 API).
+* :mod:`repro.core.stream`       — DStream: chunked pipelined Get/Put
+  (beyond-paper; overlaps producer writes with consumer reads).
 * :mod:`repro.core.dscheduler`   — real threaded DScheduler + engine.
 * :mod:`repro.core.sim*`         — deterministic cluster simulator used by
   every paper-figure experiment (CFlow/FaaSFlow/.../KNIX baselines).
@@ -21,6 +23,7 @@ from .experiments import (ExperimentResult, cold_start_latency,
 from .partition import cut_bytes, partition_workflow
 from .sim_systems import SYSTEMS, make_system
 from .simcluster import SimConfig
+from .stream import StreamBroken, StreamReader, StreamWriter
 from .workloads import BENCHMARKS, make_workflow
 
 __all__ = [
@@ -28,6 +31,7 @@ __all__ = [
     "DFlowEngine", "GlobalScheduler",
     "dataflow_initial_frontier", "dataflow_next_frontier",
     "DStore", "DataDirectoryService", "LocalStore", "Transport",
+    "StreamBroken", "StreamReader", "StreamWriter",
     "ExperimentResult", "cold_start_latency", "percentile",
     "run_closed_loop", "run_open_loop",
     "cut_bytes", "partition_workflow",

@@ -69,6 +69,13 @@ class FunctionSpec:
 
     ``fn`` is the real callable (threaded engine); the simulator uses
     ``exec_time``/``output_sizes``/``cold_start`` instead and never calls it.
+
+    DStream (chunked pipelining, see :mod:`repro.core.stream`):
+    ``stream_inputs`` names inputs delivered to ``fn`` as blocking chunk
+    iterators instead of whole values; ``stream_outputs`` names outputs the
+    engine publishes chunk-by-chunk — ``fn`` may return bytes or any
+    iterable/generator of byte chunks for those keys, and downstream
+    consumers start pulling while this function is still emitting.
     """
 
     name: str
@@ -79,6 +86,23 @@ class FunctionSpec:
     output_sizes: Mapping[str, int] = field(default_factory=dict)
     cold_start: float = 0.5          # container init if no warm container
     cpu: float = 1.0                 # cores occupied while running
+    stream_inputs: tuple[str, ...] = ()    # consumed as chunk iterators
+    stream_outputs: tuple[str, ...] = ()   # produced via put_stream
+    chunk_size: int = 1 << 18              # streaming chunk size (bytes)
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "stream_inputs", tuple(self.stream_inputs))
+        object.__setattr__(self, "stream_outputs", tuple(self.stream_outputs))
+        bad = set(self.stream_inputs) - set(self.inputs)
+        if bad:
+            raise ValueError(
+                f"{self.name}: stream_inputs {sorted(bad)} not in inputs")
+        bad = set(self.stream_outputs) - set(self.outputs)
+        if bad:
+            raise ValueError(
+                f"{self.name}: stream_outputs {sorted(bad)} not in outputs")
+        if self.chunk_size <= 0:
+            raise ValueError(f"{self.name}: chunk_size must be positive")
 
     def size_of(self, key: str) -> int:
         return int(self.output_sizes.get(key, 1 << 20))  # default 1 MB
@@ -256,6 +280,9 @@ def parse_workflow(doc: Mapping[str, Any] | str,
             output_sizes=sizes,
             cold_start=float(spec.get("cold_start", 0.5)),
             cpu=float(spec.get("cpu", 1.0)),
+            stream_inputs=resolve_inputs(spec.get("stream_inputs", ())),
+            stream_outputs=tuple(spec.get("stream_outputs", ()) or ()),
+            chunk_size=parse_size(spec.get("chunk_size", 1 << 18)),
         ))
     ext = {k: parse_size(v)
            for k, v in (doc.get("external_inputs") or {}).items()}

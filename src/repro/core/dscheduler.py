@@ -26,7 +26,7 @@ import traceback
 from dataclasses import dataclass, field
 from typing import Any, Callable, Mapping
 
-from .dag import Workflow
+from .dag import FunctionSpec, Workflow
 from .dstore import DStore, Transport
 from .partition import partition_workflow
 
@@ -145,8 +145,7 @@ class DFlowEngine:
         def execute(fname: str, node: str, *, duplicate: bool = False):
             f = wf.functions[fname]
             try:
-                kwargs = {k: store.get(node, k, timeout=self.get_timeout)
-                          for k in f.inputs}
+                kwargs = self._fetch_inputs(store, node, f)
                 result = f.fn(**kwargs) if f.fn else {}
                 if not isinstance(result, Mapping):
                     raise TypeError(
@@ -156,8 +155,7 @@ class DFlowEngine:
                     raise KeyError(f"{fname} missing outputs {missing}")
                 with state.lock:
                     first = fname not in state.completed
-                for k in f.outputs:
-                    store.put(node, k, result[k])
+                self._emit_outputs(store, node, f, result)
                 if duplicate and first:
                     report.duplicates_won.append(fname)
                 if not first:
@@ -237,6 +235,44 @@ class DFlowEngine:
                                                   timeout=self.get_timeout)
         return report
 
+    # -- input fetch / output publication ----------------------------------
+    def _fetch_inputs(self, store: DStore, node: str,
+                      f: FunctionSpec) -> dict[str, Any]:
+        """One blocking fetch per input (fine-grained retrieval).  Streaming
+        inputs arrive as blocking chunk iterators instead: the callable
+        starts consuming chunk 0 while its precursor is still emitting
+        chunk N (DStream pipelining)."""
+        return {
+            k: (store.get_stream(node, k, timeout=self.get_timeout)
+                if k in f.stream_inputs
+                else store.get(node, k, timeout=self.get_timeout))
+            for k in f.inputs}
+
+    @staticmethod
+    def _emit_outputs(store: DStore, node: str, f: FunctionSpec,
+                      result: Mapping[str, Any]) -> None:
+        """Publish outputs: plain Put, or chunked ``put_stream`` for keys in
+        ``f.stream_outputs`` (bytes or any iterable of byte chunks).
+        Draining a generator here is what overlaps production with
+        downstream pulls; a generator that raises aborts the stream so
+        blocked consumers fail fast instead of hanging until timeout."""
+        for k in f.outputs:
+            if k not in f.stream_outputs:
+                store.put(node, k, result[k])
+                continue
+            value = result[k]
+            writer = store.put_stream(node, k, chunk_size=f.chunk_size)
+            try:
+                if isinstance(value, (bytes, bytearray, memoryview)):
+                    writer.write(value)
+                else:
+                    for chunk in value:
+                        writer.write(chunk)
+            except BaseException:
+                writer.abort()
+                raise
+            writer.close()
+
     # -- beyond-paper incremental recovery --------------------------------
     def _recover(self, wf: Workflow, placement: dict[str, str],
                  store: DStore, state: _InstanceState, lost_keys: list[str],
@@ -264,11 +300,9 @@ class DFlowEngine:
 
             def rerun(fname=fname, node=node, f=f):
                 try:
-                    kwargs = {k: store.get(node, k, timeout=self.get_timeout)
-                              for k in f.inputs}
+                    kwargs = self._fetch_inputs(store, node, f)
                     result = f.fn(**kwargs) if f.fn else {}
-                    for k in f.outputs:
-                        store.put(node, k, result[k])
+                    self._emit_outputs(store, node, f, result)
                     import time as _t
                     state.mark_done(fname, _t.monotonic())
                     on_complete(fname)

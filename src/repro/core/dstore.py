@@ -36,6 +36,11 @@ class GetTimeout(TimeoutError):
     """Raised when Get blocks longer than the configured timeout."""
 
 
+# stream.py lazily imports GetTimeout, so this import must come after it.
+from .stream import (DEFAULT_CHUNK, StreamDirectory, StreamReader,  # noqa: E402
+                     StreamWriter, chunk_key)
+
+
 def _sizeof(value: Any) -> int:
     try:
         import numpy as np
@@ -103,6 +108,18 @@ class DataDirectoryService:
             m = self._meta.get(key)
             if m and node in m.locations and m.locations[node] > 0:
                 m.locations[node] -= 1
+
+    def drop_replica(self, key: str, node: str) -> None:
+        """Remove one phantom replica (registered by a Put that raced a node
+        failure); deletes the record when no replica remains, so consumers
+        block again until a recovery re-execution re-publishes."""
+        with self._cv:
+            m = self._meta.get(key)
+            if m is None:
+                return
+            m.locations.pop(node, None)
+            if not m.locations:
+                del self._meta[key]
 
     def keys(self) -> list[str]:
         with self._lock:
@@ -178,41 +195,99 @@ class DStore:
     def __init__(self, nodes: list[str],
                  transport: Transport | None = None):
         self.directory = DataDirectoryService()
+        self.streams = StreamDirectory()
         self.stores = {n: LocalStore(n) for n in nodes}
         self.transport = transport or Transport()
+        # Serialises writes against fail_node: without it a Put interleaving
+        # with a failure (write → store wiped → publish) would register a
+        # replica whose bytes are gone, invisible to recovery.
+        self._write_lock = threading.Lock()
 
     # -- Table 1 core API ------------------------------------------------
     def put(self, node: str, key: str, value: Any) -> None:
         """Create data with the given key (immutable; §3.3)."""
         store = self.stores[node]
-        if self.directory.peek(key) is not None and store.has(key):
-            return                      # duplicate write: first-writer-wins
-        store.write(key, value)
-        # Metadata publish is what wakes consumers; in the real system it is
-        # asynchronous w.r.t. the producer container, here it is just cheap.
-        self.directory.publish(key, _sizeof(value), node)
+        with self._write_lock:
+            if self.directory.peek(key) is not None and store.has(key):
+                return                  # duplicate write: first-writer-wins
+            store.write(key, value)
+            # Metadata publish is what wakes consumers; in the real system it
+            # is asynchronous w.r.t. the producer container, here just cheap.
+            self.directory.publish(key, _sizeof(value), node)
+        self.streams.notify_plain(key)   # wake get_stream fallbacks
 
     def get(self, node: str, key: str,
             timeout: float | None = None) -> Any:
-        """Blocking Get (Table 1): may wait for the producer (§3.3.2)."""
+        """Blocking Get (Table 1): may wait for the producer (§3.3.2).
+
+        A replica whose bytes are gone (its Put raced a node failure, so the
+        directory record points at a wiped store) is dropped and the wait
+        restarts — recovery re-publishes the key and wakes us again.
+        """
         store = self.stores[node]
-        if store.has(key):
-            return store.read(key)
-        meta = self.directory.wait(key, timeout)
-        if store.has(key):
-            return store.read(key)
-        src = self.directory.choose_replica(key)
-        try:
-            value = self.stores[src].read(key)
-            self.transport.move(meta.size)     # receiver-driven pull
-        finally:
-            self.directory.release_replica(key, src)
-        store.write(key, value)
-        self.directory.publish(key, meta.size, node)   # new replica
-        return value
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            if store.has(key):
+                return store.read(key)
+            remaining = None
+            if deadline is not None:
+                remaining = max(deadline - time.monotonic(), 0.0)
+            meta = self.directory.wait(key, remaining)
+            if store.has(key):
+                return store.read(key)
+            try:
+                src = self.directory.choose_replica(key)
+            except KeyError:
+                continue               # record vanished while unlocked
+            try:
+                value = self.stores[src].read(key)
+            except KeyError:
+                self.directory.release_replica(key, src)
+                self.directory.drop_replica(key, src)  # phantom replica
+                continue
+            try:
+                self.transport.move(meta.size)     # receiver-driven pull
+            finally:
+                self.directory.release_replica(key, src)
+            # Same write→publish atomicity vs fail_node as put(): without
+            # the lock a failure of `node` here would leave a phantom
+            # replica that masks the data loss from recovery.
+            with self._write_lock:
+                store.write(key, value)
+                self.directory.publish(key, meta.size, node)  # new replica
+            return value
+
+    # -- DStream chunked API (beyond-paper; see stream.py) -----------------
+    def put_stream(self, node: str, key: str, *,
+                   chunk_size: int = DEFAULT_CHUNK) -> StreamWriter:
+        """Open a chunked writer for ``key``; chunks publish as they fill
+        and wake blocked readers per chunk (§3.3.2 at chunk granularity)."""
+        return StreamWriter(self, node, key, chunk_size)
+
+    def get_stream(self, node: str, key: str,
+                   timeout: float | None = None,
+                   prefetch: bool = True) -> StreamReader:
+        """Blocking chunk iterator over ``key``: yields chunk 0 while the
+        producer may still be emitting chunk N.  Falls back to chunking a
+        monolithically-Put value."""
+        return StreamReader(self, node, key, timeout, prefetch)
+
+    def put_chunk(self, node: str, key: str, idx: int, chunk: bytes) -> None:
+        """One stream chunk: bytes in the local store, a directory record
+        of its own (so remote pulls are chunk-granular and receiver-driven),
+        and a stream-directory publish that wakes blocked readers."""
+        ck = chunk_key(key, idx)
+        with self._write_lock:
+            self.stores[node].write(ck, chunk)
+            self.directory.publish(ck, len(chunk), node)
+        self.streams.publish_chunk(key, idx, len(chunk))
 
     # -- fault handling ----------------------------------------------------
     def fail_node(self, node: str) -> list[str]:
         """Simulate a node loss; returns data keys that must be recomputed."""
-        self.stores[node].drop_all()
-        return self.directory.drop_node(node)
+        # Open streams abort (blocked readers get a clean error); closed
+        # streams are evicted so a recovery rerun can re-claim them.
+        self.streams.fail_owner(node)
+        with self._write_lock:
+            self.stores[node].drop_all()
+            return self.directory.drop_node(node)

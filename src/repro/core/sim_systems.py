@@ -14,6 +14,8 @@ system            invocation pattern          data plane
                                               sandbox per node (process pool)
 ``faasflow+dstore`` controlflow, decentralized DStorePlane   (paper §5.5)
 ``dflow``         **dataflow (Algorithm 1)**  DStorePlane
+``dflow-stream``  **dataflow (Algorithm 1)**  StreamingDStorePlane (DStream:
+                                              chunked pipelined exchange)
 ================  ==========================  ============================
 
 The dataflow local scheduler implements the paper's Algorithm 1 exactly:
@@ -33,13 +35,14 @@ from dataclasses import dataclass, field
 from .dag import Workflow
 from .partition import partition_workflow
 from .sim import Env, Event, all_of
-from .sim_dataplane import CentralPlane, DStorePlane, HybridPlane
+from .sim_dataplane import (CentralPlane, DStorePlane, HybridPlane,
+                            StreamingDStorePlane)
 from .simcluster import MASTER, Cluster, SimConfig
 
 __all__ = ["make_system", "SimSystem", "InstanceResult", "SYSTEMS"]
 
 SYSTEMS = ("cflow", "faasflow", "faasflowredis", "knix",
-           "faasflow+dstore", "dflow")
+           "faasflow+dstore", "dflow", "dflow-stream")
 
 
 @dataclass
@@ -62,7 +65,7 @@ class SimSystem:
     def __init__(self, env: Env, cluster: Cluster, wf: Workflow, *,
                  pattern: str, plane, prewarm: bool, sandbox: bool,
                  central_sched: bool, name: str,
-                 single_node: str | None = None):
+                 single_node: str | None = None, streaming: bool = False):
         self.env = env
         self.cluster = cluster
         self.cfg = cluster.cfg
@@ -72,6 +75,7 @@ class SimSystem:
         self.prewarm = prewarm
         self.sandbox = sandbox              # KNIX: process-in-container
         self.central_sched = central_sched  # CFlow: master drives invocation
+        self.streaming = streaming          # DStream chunked exchange
         self.name = name
         if single_node is not None:
             # KNIX deployment (paper §5.1): the whole workflow runs on one
@@ -166,8 +170,14 @@ class SimSystem:
                 pool.release()
             return
         # Fetch every input (parallel / fine-grained; DStore gets may block).
-        gets = [self.plane.get(node, self.key(res.inst, k))
-                for k in f.inputs]
+        # DStream: chunk-granular gets pull chunk i while the producer is
+        # still emitting chunk i+1, so transfer overlaps production.
+        if self.streaming:
+            gets = [self.plane.get_stream(node, self.key(res.inst, k))
+                    for k in f.inputs]
+        else:
+            gets = [self.plane.get(node, self.key(res.inst, k))
+                    for k in f.inputs]
         if gets:
             yield all_of(self.env, gets)
         # Execute on one core.
@@ -177,13 +187,24 @@ class SimSystem:
             if pool is not None:
                 pool.release()
             return
-        yield self.env.timeout(f.exec_time)
-        n.cores.release()
-        # Store outputs.
-        puts = [self.plane.put(node, self.key(res.inst, k), f.size_of(k),
-                               consumers=self.consumers_of(k),
-                               ref_node=self.storage_ref[fname])
-                for k in f.outputs]
+        if self.streaming:
+            # Announce outputs now; chunks publish paced across execution.
+            puts = [self.plane.put_stream(node, self.key(res.inst, k),
+                                          f.size_of(k),
+                                          consumers=self.consumers_of(k),
+                                          ref_node=self.storage_ref[fname],
+                                          produce_time=f.exec_time)
+                    for k in f.outputs]
+            yield self.env.timeout(f.exec_time)
+            n.cores.release()
+        else:
+            yield self.env.timeout(f.exec_time)
+            n.cores.release()
+            # Store outputs.
+            puts = [self.plane.put(node, self.key(res.inst, k), f.size_of(k),
+                                   consumers=self.consumers_of(k),
+                                   ref_node=self.storage_ref[fname])
+                    for k in f.outputs]
         if puts:
             yield all_of(self.env, puts)
         if pool is not None:
@@ -369,4 +390,11 @@ def make_system(name: str, env: Env, cluster: Cluster,
         return SimSystem(env, cluster, wf, pattern="dataflow",
                          plane=DStorePlane(env, cluster), prewarm=False,
                          sandbox=False, central_sched=False, name=name)
+    if name == "dflow-stream":
+        # DFlow + DStream: Algorithm 1 invocation with chunked pipelined
+        # data exchange (transfer overlaps production; beyond-paper).
+        return SimSystem(env, cluster, wf, pattern="dataflow",
+                         plane=StreamingDStorePlane(env, cluster),
+                         prewarm=False, sandbox=False, central_sched=False,
+                         name=name, streaming=True)
     raise ValueError(f"unknown system {name!r}; choose from {SYSTEMS}")

@@ -34,6 +34,7 @@ class SimConfig:
     couch_bw_eff: float = 0.6             # CouchDB effective wire efficiency
     redis_op: float = 1.0e-3              # Redis RESP overhead
     redis_bw_eff: float = 0.95
+    stream_chunk: float = 1e6             # DStream chunk size (B)
     cold_start: float = 0.8               # container cold boot (docker run)
     knix_process_start: float = 0.02      # KNIX in-container process fork
     max_containers: int = 96              # 32GB / 256MB, with headroom

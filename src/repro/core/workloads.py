@@ -16,7 +16,8 @@ from __future__ import annotations
 from .dag import FunctionSpec, Workflow
 
 __all__ = ["BENCHMARKS", "make_workflow", "wordcount", "file_processing",
-           "cycles", "epigenomics", "genome", "soykb"]
+           "cycles", "epigenomics", "genome", "soykb",
+           "wordcount_large", "genome_large"]
 
 MB = 1 << 20
 
@@ -177,6 +178,56 @@ def soykb(samples: int = 7, chromosomes: int = 4) -> Workflow:
     return Workflow("Soy", fns, {"reads": int(20 * MB)})
 
 
+# ----------------------------------------------------------------------
+# DStream stress variants: same DAG shapes, output sizes scaled so every
+# edge carries many stream chunks (SimConfig.stream_chunk defaults to 1 MB)
+# and inter-node transfer time rivals execution time — the regime where
+# chunked pipelining (overlap of production and transfer) has headroom.
+
+def wordcount_large(shards: int = 8) -> Workflow:
+    """WC-L: map/reduce with tens-of-MB shards (chunk-aware WC variant)."""
+    rng = _Det(707)
+    fns = [_fn("split", ["corpus"], [f"shard.{i}" for i in range(shards)],
+               1.2, {f"shard.{i}": int(24 * MB) for i in range(shards)})]
+    for i in range(shards):
+        fns.append(_fn(f"count.{i}", [f"shard.{i}"], [f"wc.{i}"],
+                       rng.uniform(0.8, 1.6), {f"wc.{i}": int(12 * MB)}))
+    fns.append(_fn("merge", [f"wc.{i}" for i in range(shards)], ["result"],
+                   1.0, {"result": int(8 * MB)}))
+    return Workflow("WC-L", fns, {"corpus": int(64 * MB)})
+
+
+def genome_large(individuals: int = 12, analyses: int = 8) -> Workflow:
+    """Gen-L: 1000Genome with a fat shared intermediate (chunk-aware).
+
+    ``merged_ind`` (32 MB) fans out to every analysis function, so the
+    monolithic plane serialises a long transfer per remote consumer while
+    DStream starts every consumer on chunk 0 during the merge."""
+    rng = _Det(808)
+    fns = []
+    for i in range(individuals):
+        fns.append(_fn(f"individuals.{i}", ["chromosome"], [f"ind.{i}"],
+                       rng.uniform(1.0, 2.0), {f"ind.{i}": int(8 * MB)}))
+    fns.append(_fn("individuals_merge",
+                   [f"ind.{i}" for i in range(individuals)],
+                   ["merged_ind"], 2.0, {"merged_ind": int(32 * MB)}))
+    fns.append(_fn("sifting", ["chromosome"], ["sifted"], 1.4,
+                   {"sifted": int(16 * MB)}))
+    half = analyses // 2
+    for j in range(half):
+        fns.append(_fn(f"mutation_overlap.{j}", ["merged_ind", "sifted"],
+                       [f"mut.{j}"], rng.uniform(1.0, 1.8),
+                       {f"mut.{j}": int(4 * MB)}))
+    for j in range(analyses - half):
+        fns.append(_fn(f"frequency.{j}", ["merged_ind", "sifted"],
+                       [f"freq.{j}"], rng.uniform(1.2, 2.0),
+                       {f"freq.{j}": int(4 * MB)}))
+    fns.append(_fn("report", [f"mut.{j}" for j in range(half)] +
+                   [f"freq.{j}" for j in range(analyses - half)],
+                   ["report"], 1.0, {"report": int(2 * MB)}))
+    return Workflow("Gen-L", fns, {"chromosome": int(32 * MB)})
+
+
 BENCHMARKS = {
     "WC": wordcount,
     "FP": file_processing,
@@ -184,6 +235,8 @@ BENCHMARKS = {
     "Epi": epigenomics,
     "Gen": genome,
     "Soy": soykb,
+    "WC-L": wordcount_large,
+    "Gen-L": genome_large,
 }
 
 

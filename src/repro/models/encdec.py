@@ -142,7 +142,12 @@ class EncDecLM:
                    memory_len: int) -> EncDecCache:
         cfg = self.cfg
         L = cfg.n_layers
-        kv = init_cache(cfg, batch, max_len)
+        # Self-attention KV stays at compute precision: the double-sublayer
+        # decoder amplifies bf16 cache rounding through the residual stream
+        # (~20x over 4 layers), breaking prefill+decode vs forward
+        # consistency.  The cross K/V cache can stay bf16 — its inputs are
+        # already bf16, so the round-trip is exact.
+        kv = init_cache(cfg, batch, max_len, dtype=jnp.float32)
         stk = jax.tree.map(
             lambda a: (jnp.broadcast_to(a, (L,) + a.shape) if a.ndim
                        else jnp.broadcast_to(a, (L,))), kv)

@@ -1,0 +1,32 @@
+"""JAX version compatibility shims for sharding primitives.
+
+``shard_map`` graduated from ``jax.experimental.shard_map.shard_map`` to
+top-level ``jax.shard_map`` (and its ``check_rep`` kwarg was renamed to
+``check_vma``) across JAX releases.  This module resolves whichever spelling
+the installed JAX provides and normalises the kwarg, so model/runtime code
+can call :func:`shard_map` with the modern signature everywhere.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+__all__ = ["shard_map"]
+
+_NATIVE = getattr(jax, "shard_map", None)
+
+if _NATIVE is None:
+    from jax.experimental.shard_map import shard_map as _experimental
+
+
+def shard_map(f: Callable[..., Any], *, mesh, in_specs, out_specs,
+              check_vma: bool = True) -> Callable[..., Any]:
+    """``jax.shard_map`` if available, else the experimental fallback
+    (which spells ``check_vma`` as ``check_rep``)."""
+    if _NATIVE is not None:
+        return _NATIVE(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                       check_vma=check_vma)
+    return _experimental(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=check_vma)

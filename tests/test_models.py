@@ -6,8 +6,7 @@ import math
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from conftest import given, settings, st  # hypothesis or skip-shim
 
 from repro.models.attention import (blockwise_attention, decode_attention,
                                     KVCache)

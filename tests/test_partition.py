@@ -1,7 +1,6 @@
 """GS partitioner tests incl. hypothesis property tests on random DAGs."""
 
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from conftest import given, settings, st  # hypothesis or skip-shim
 
 from repro.core.dag import FunctionSpec, Workflow
 from repro.core.partition import cut_bytes, partition_workflow

@@ -18,14 +18,18 @@ def test_all_systems_complete_simple_benchmark():
 
 
 def test_dflow_beats_every_baseline_p99():
-    """Paper Fig. 9: DFlow has the lowest 99%-ile latency everywhere."""
+    """Paper Fig. 9: DFlow has the lowest 99%-ile latency everywhere.
+
+    ``dflow-stream`` is our beyond-paper extension, not a paper baseline —
+    it is allowed (expected, even) to beat plain dflow."""
     for bench in ["WC", "Gen", "Soy"]:
         wf = make_workflow(bench)
         p99 = {s: run_open_loop(s, wf, rate_per_min=6, n_invocations=5).p99
                for s in SYSTEMS}
         for s in SYSTEMS:
-            if s != "dflow":
+            if s not in ("dflow", "dflow-stream"):
                 assert p99["dflow"] <= p99[s] + 1e-6, (bench, s, p99)
+                assert p99["dflow-stream"] <= p99[s] + 1e-6, (bench, s, p99)
 
 
 def test_only_cflow_cyc_times_out_fig9():
