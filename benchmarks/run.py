@@ -13,6 +13,7 @@ MODULES = [
     ("fig11", "benchmarks.fig11_colocation"),
     ("fig12", "benchmarks.fig12_coldstart"),
     ("fig13", "benchmarks.fig13_invocation"),
+    ("serve", "benchmarks.serve_load"),
     ("kernels", "benchmarks.kernels_bench"),
     ("roofline", "benchmarks.roofline_bench"),
 ]

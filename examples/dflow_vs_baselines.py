@@ -5,10 +5,38 @@ benchmark across all six systems and prints the p99 table plus DFlow's
 reductions — compare with the paper's 52-60% (CFlow), 28-40% (FaaSFlow),
 20-25% (FaaSFlowRedis), 36-40% (KNIX).
 
+Then repeats the invocation-pattern ablation on the *real threaded engine*
+via the DServe serving layer: concurrent Poisson-arriving instances of the
+Srv request chain, with explicit container pools — dataflow prewarms each
+function's container at precursor launch (§3.2), controlflow boots on the
+critical path.
+
 Run:  PYTHONPATH=src python examples/dflow_vs_baselines.py
 """
 
 from repro.core import SYSTEMS, make_workflow, run_open_loop
+from repro.core.serve import DServe, poisson_arrivals
+from repro.core.workloads import serving_chain
+
+
+def serve_section():
+    print("\nDServe (real threaded engine, container pools), Srv chain "
+          "@ 8 rps:")
+    print(f"{'pattern':14s} {'p50 (s)':>8s} {'p99 (s)':>8s} "
+          f"{'cold':>5s} {'conc':>5s}")
+    p99 = {}
+    for pattern in ("controlflow", "dataflow"):
+        wf = serving_chain(stages=4, exec_time=0.03, cold_start=0.15,
+                           payload=16 * 1024)
+        srv = DServe(wf, n_nodes=2, pattern=pattern, keepalive=10.0,
+                     max_per_node=16)
+        rep = srv.run(poisson_arrivals(8.0, 10, seed=7),
+                      inputs={"request": b"req"})
+        p99[pattern] = rep.p99
+        print(f"{pattern:14s} {rep.p50:8.3f} {rep.p99:8.3f} "
+              f"{rep.cold_starts:5d} {rep.max_concurrency:5d}")
+    assert p99["dataflow"] < p99["controlflow"]
+    print("dataflow-triggered prewarm wins on real threads too ✓")
 
 
 def main():
@@ -27,8 +55,11 @@ def main():
             continue
         red = 100 * (1 - p99["dflow"] / p99[base])
         print(f"DFlow p99 reduction vs {base:16s}: {red:5.1f}%")
-    assert all(p99["dflow"] <= p99[s] + 1e-9 for s in SYSTEMS)
-    print("\nDFlow wins on every baseline ✓")
+    # dflow-stream is our beyond-paper extension — expected to beat dflow.
+    assert all(p99["dflow"] <= p99[s] + 1e-9 for s in SYSTEMS
+               if s != "dflow-stream")
+    print("\nDFlow wins on every paper baseline ✓")
+    serve_section()
 
 
 if __name__ == "__main__":

@@ -8,6 +8,9 @@ Layers:
 * :mod:`repro.core.stream`       — DStream: chunked pipelined Get/Put
   (beyond-paper; overlaps producer writes with consumer reads).
 * :mod:`repro.core.dscheduler`   — real threaded DScheduler + engine.
+* :mod:`repro.core.serve`        — DServe: concurrent multi-instance
+  serving with explicit container pools (cold boot / keep-alive TTL /
+  dataflow-triggered prewarm) and open-loop load generation.
 * :mod:`repro.core.sim*`         — deterministic cluster simulator used by
   every paper-figure experiment (CFlow/FaaSFlow/.../KNIX baselines).
 * :mod:`repro.core.workloads`    — paper benchmarks (WC/FP/Cyc/Epi/Gen/Soy).
@@ -15,12 +18,14 @@ Layers:
 """
 
 from .dag import FunctionSpec, Workflow, parse_workflow
-from .dscheduler import (DFlowEngine, GlobalScheduler,
+from .dscheduler import (DFlowEngine, GlobalScheduler, InstanceRun,
                          dataflow_initial_frontier, dataflow_next_frontier)
 from .dstore import DStore, DataDirectoryService, LocalStore, Transport
 from .experiments import (ExperimentResult, cold_start_latency,
                           percentile, run_closed_loop, run_open_loop)
 from .partition import cut_bytes, partition_workflow
+from .serve import (ContainerPool, ContainerService, DServe, ServeReport,
+                    poisson_arrivals, trace_arrivals)
 from .sim_systems import SYSTEMS, make_system
 from .simcluster import SimConfig
 from .stream import StreamBroken, StreamReader, StreamWriter
@@ -28,10 +33,12 @@ from .workloads import BENCHMARKS, make_workflow
 
 __all__ = [
     "FunctionSpec", "Workflow", "parse_workflow",
-    "DFlowEngine", "GlobalScheduler",
+    "DFlowEngine", "GlobalScheduler", "InstanceRun",
     "dataflow_initial_frontier", "dataflow_next_frontier",
     "DStore", "DataDirectoryService", "LocalStore", "Transport",
     "StreamBroken", "StreamReader", "StreamWriter",
+    "ContainerPool", "ContainerService", "DServe", "ServeReport",
+    "poisson_arrivals", "trace_arrivals",
     "ExperimentResult", "cold_start_latency", "percentile",
     "run_closed_loop", "run_open_loop",
     "cut_bytes", "partition_workflow",

@@ -5,13 +5,25 @@ The executable twin of the simulator's scheduling logic (§3.2):
 * :class:`GlobalScheduler` — partitions the workflow onto nodes (same
   locality-first GS as the simulator / FaaSFlow) and pushes metadata
   (entry points, successor lists, placements) to the local schedulers.
-* :class:`DataflowLocalScheduler` — paper Algorithm 1.  Each launched
-  function runs in its own thread, immediately calls ``Get`` for every
-  input (fine-grained retrieval: one blocking fetch per input), executes
-  when the data arrives, and ``Put``s its outputs, which wakes downstream
-  blocked fetches.  Execution is therefore out-of-order and overlap-rich.
-* :class:`ControlflowLocalScheduler` — the FaaSFlow-style baseline: a
-  function launches only once **all** its precursors completed.
+* :class:`InstanceRun` — one in-flight workflow instance implementing
+  paper Algorithm 1 (dataflow) or the FaaSFlow-style baseline
+  (controlflow).  Each launched function runs in its own thread,
+  immediately calls ``Get`` for every input (fine-grained retrieval: one
+  blocking fetch per input), executes when the data arrives, and ``Put``s
+  its outputs, which wakes downstream blocked fetches.  Execution is
+  therefore out-of-order and overlap-rich.
+* :class:`DFlowEngine` — facade: ``run()`` executes one instance on a
+  private DStore (the classic single-shot path); ``start()`` returns the
+  :class:`InstanceRun` so a serving layer (:class:`repro.core.serve.DServe`)
+  can drive many concurrent instances over a *shared* DStore with
+  per-instance key namespacing and a shared container service.
+
+Serving integration (paper §3.2 cold-start optimization): when the engine
+carries a container service, every function acquires a container before
+fetching inputs, and — under the dataflow pattern with ``prewarm`` — the
+containers of a function's successors start booting the moment the
+function *launches* (precursor launch, not input arrival), so boot time
+overlaps precursor execution instead of sitting on the critical path.
 
 Beyond-paper (documented in DESIGN.md §7): duplicate-issue straggler
 mitigation (first-writer-wins is safe because DStore data is immutable) and
@@ -22,15 +34,16 @@ the paper's §3.3.5 restarts the whole workflow).
 from __future__ import annotations
 
 import threading
-import traceback
+import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Mapping
+from typing import Any, Mapping
 
 from .dag import FunctionSpec, Workflow
 from .dstore import DStore, Transport
 from .partition import partition_workflow
+from .stream import StreamBroken, base_key
 
-__all__ = ["GlobalScheduler", "DFlowEngine", "RunReport",
+__all__ = ["GlobalScheduler", "DFlowEngine", "InstanceRun", "RunReport",
            "dataflow_initial_frontier", "dataflow_next_frontier"]
 
 
@@ -60,6 +73,7 @@ class RunReport:
     bytes_moved: int = 0
     reexecuted: list[str] = field(default_factory=list)
     duplicates_won: list[str] = field(default_factory=list)
+    cold_starts: int = 0            # request-path cold boots this instance
 
 
 class GlobalScheduler:
@@ -93,175 +107,246 @@ class _InstanceState:
             self.all_done.set()
 
 
-class DFlowEngine:
-    """Execute a Workflow of real callables with dataflow invocation.
+class InstanceRun:
+    """One workflow instance in flight.
 
-    ``pattern`` ∈ {"dataflow", "controlflow"} — the §5.5 ablation in real
-    (threaded) form.  ``transport`` may carry a bandwidth to make network
-    time observable.  ``straggler_factor`` (beyond-paper): when a launched
-    function has run longer than factor × its spec exec_time, a duplicate
-    is issued on another node; DStore immutability makes the race benign.
+    Namespacing: when ``instance`` is set, every DStore key (external
+    inputs, function outputs, stream chunks) is stored as
+    ``"<instance>:<key>"`` so concurrent instances sharing one DStore never
+    collide — the real-path twin of the simulator's ``key(inst, k)``.
     """
 
-    def __init__(self, n_nodes: int = 2, *, pattern: str = "dataflow",
-                 transport: Transport | None = None,
-                 get_timeout: float = 120.0,
-                 straggler_factor: float | None = None):
-        if pattern not in ("dataflow", "controlflow"):
-            raise ValueError(pattern)
-        self.nodes = [f"node{i}" for i in range(n_nodes)]
-        self.gs = GlobalScheduler(self.nodes)
-        self.pattern = pattern
-        self.transport = transport or Transport()
-        self.get_timeout = get_timeout
-        self.straggler_factor = straggler_factor
-
-    # ------------------------------------------------------------------
-    def run(self, wf: Workflow, inputs: Mapping[str, Any] | None = None,
-            *, inject_failure: str | None = None) -> RunReport:
-        """Execute one workflow instance; returns exit-function outputs.
-
-        ``inject_failure``: name of a node that "crashes" right after the
-        first function on it completes — exercises incremental recovery.
-        """
-        import time as _time
-
-        placement = self.gs.assign(wf)
-        store = DStore(self.nodes, self.transport)
-        state = _InstanceState(wf)
-        t0 = _time.monotonic()
-        report = RunReport(outputs={}, wall_time=0.0)
-        failure_armed = threading.Event()
+    def __init__(self, engine: "DFlowEngine", wf: Workflow,
+                 inputs: Mapping[str, Any] | None, *,
+                 store: DStore | None = None, instance: str | None = None,
+                 placement: dict[str, str] | None = None,
+                 inject_failure: str | None = None):
+        self.engine = engine
+        self.wf = wf
+        self.inputs = dict(inputs or {})
+        self.store = store if store is not None else DStore(
+            engine.nodes, engine.transport)
+        self.instance = instance
+        self._ns = f"{instance}:" if instance else ""
+        self.placement = dict(placement) if placement is not None \
+            else engine.gs.assign(wf)
+        self.state = _InstanceState(wf)
+        self.report = RunReport(outputs={}, wall_time=0.0)
+        self._inject_failure = inject_failure
+        self._failure_armed = threading.Event()
         if inject_failure:
-            failure_armed.set()
+            self._failure_armed.set()
+        self._started = False
+        self.t0 = 0.0
 
-        for k, v in (inputs or {}).items():
+    # -- key namespacing ---------------------------------------------------
+    def ns(self, key: str) -> str:
+        return self._ns + key
+
+    def strip_ns(self, key: str) -> str | None:
+        """Namespaced key -> raw key, or None if it belongs elsewhere."""
+        if not self._ns:
+            return key
+        if key.startswith(self._ns):
+            return key[len(self._ns):]
+        return None
+
+    def image(self, fname: str) -> str:
+        return f"{self.wf.name}/{fname}"
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self) -> "InstanceRun":
+        if self._started:
+            raise RuntimeError("instance already started")
+        self._started = True
+        self.t0 = time.monotonic()
+        wf, placement, store = self.wf, self.placement, self.store
+        for k, v in self.inputs.items():
             # Stage external inputs on the node of each first consumer.
             consumers = [f.name for f in wf.functions.values()
                          if k in f.inputs]
-            node = placement[consumers[0]] if consumers else self.nodes[0]
-            store.put(node, k, v)
-
-        def execute(fname: str, node: str, *, duplicate: bool = False):
-            f = wf.functions[fname]
-            try:
-                kwargs = self._fetch_inputs(store, node, f)
-                result = f.fn(**kwargs) if f.fn else {}
-                if not isinstance(result, Mapping):
-                    raise TypeError(
-                        f"{fname} must return a mapping of outputs")
-                missing = set(f.outputs) - set(result)
-                if missing:
-                    raise KeyError(f"{fname} missing outputs {missing}")
-                with state.lock:
-                    first = fname not in state.completed
-                self._emit_outputs(store, node, f, result)
-                if duplicate and first:
-                    report.duplicates_won.append(fname)
-                if not first:
-                    return
-                state.mark_done(fname, _time.monotonic() - t0)
-                # -- optional fault injection: node dies after its first
-                # completion; lost outputs trigger incremental re-execution.
-                if (inject_failure == node and failure_armed.is_set()):
-                    failure_armed.clear()
-                    lost = store.fail_node(node)
-                    self._recover(wf, placement, store, state, lost,
-                                  report, on_complete)
-                on_complete(fname)
-            except BaseException as exc:   # noqa: BLE001 - report upward
-                state.mark_failed(fname, exc)
-
-        def launch(fname: str):
-            with state.lock:
-                if fname in state.launched:
-                    return
-                state.launched.add(fname)
-            node = placement[fname]
-            th = threading.Thread(target=execute, args=(fname, node),
-                                  daemon=True, name=f"dflow-{fname}")
-            th.start()
-            if self.straggler_factor and wf.functions[fname].exec_time:
-                budget = self.straggler_factor * wf.functions[fname].exec_time
-
-                def watchdog():
-                    th.join(budget)
-                    with state.lock:
-                        done = fname in state.completed
-                    if not done and not state.failed:
-                        alt = next(n for n in self.nodes if n != node)
-                        threading.Thread(
-                            target=execute, args=(fname, alt),
-                            kwargs={"duplicate": True}, daemon=True).start()
-                threading.Thread(target=watchdog, daemon=True).start()
-
-        def on_complete(fname: str):
-            if self.pattern == "dataflow":
-                for t in dataflow_next_frontier(wf, fname):
-                    launch(t)
-            else:
-                for s in wf.successors[fname]:
-                    with state.lock:
-                        ready = all(p in state.completed
-                                    for p in wf.predecessors[s])
-                    if ready:
-                        launch(s)
-
-        if self.pattern == "dataflow":
+            node = placement[consumers[0]] if consumers \
+                else self.engine.nodes[0]
+            store.put(node, self.ns(k), v)
+        if self.engine.pattern == "dataflow":
             for fname in dataflow_initial_frontier(wf):
-                launch(fname)
+                self._launch(fname)
         else:
             for fname in wf.entry_points:
-                launch(fname)
+                self._launch(fname)
+        return self
 
-        state.all_done.wait(timeout=self.get_timeout * 2)
+    def wait(self, timeout: float | None = None) -> RunReport:
+        """Block until the instance completes; returns the report."""
+        state, wf = self.state, self.wf
+        state.all_done.wait(timeout=timeout if timeout is not None
+                            else self.engine.get_timeout * 2)
         if state.failed:
             fname, exc = next(iter(state.failed.items()))
             raise RuntimeError(f"function {fname!r} failed") from exc
         if not state.all_done.is_set():
             raise TimeoutError("workflow did not complete")
-
-        report.wall_time = _time.monotonic() - t0
+        report = self.report
+        report.wall_time = time.monotonic() - self.t0
         report.per_function = dict(state.completed)
-        report.transfers = self.transport.transfers
-        report.bytes_moved = self.transport.bytes_moved
+        report.transfers = self.engine.transport.transfers
+        report.bytes_moved = self.engine.transport.bytes_moved
         # Gather every *sink* datum (produced but never consumed) — exit
         # functions' outputs plus by-products like metrics/final state.
         consumed = {k for f in wf.functions.values() for k in f.inputs}
         for f in wf.functions.values():
             for k in f.outputs:
                 if k not in consumed or f.name in wf.exit_points:
-                    report.outputs[k] = store.get(self.nodes[0], k,
-                                                  timeout=self.get_timeout)
+                    report.outputs[k] = self.store.get(
+                        self.engine.nodes[0], self.ns(k),
+                        timeout=self.engine.get_timeout)
         return report
 
+    def evict(self) -> None:
+        """Instance-scoped eviction: free every key this instance stored
+        (bounded memory under sustained serving)."""
+        if self._ns:
+            self.store.evict_instance(self._ns)
+
+    # -- launch / execute --------------------------------------------------
+    def _launch(self, fname: str) -> None:
+        state, wf, engine = self.state, self.wf, self.engine
+        with state.lock:
+            if fname in state.launched:
+                return
+            state.launched.add(fname)
+        node = self.placement[fname]
+        th = threading.Thread(target=self._execute, args=(fname, node),
+                              daemon=True,
+                              name=f"dflow-{self.instance or wf.name}-{fname}")
+        th.start()
+        # Dataflow-triggered prewarm (§3.2): this function's launch is its
+        # successors' precursor-launch signal — their containers start
+        # booting now, overlapping with this function's own execution.
+        # Strictly a dataflow-pattern mechanism: the controlflow baseline
+        # (§5.5 ablation) must boot only when a function becomes ready.
+        if (engine.containers is not None and engine.prewarm
+                and engine.pattern == "dataflow"):
+            for s in wf.successors[fname]:
+                engine.containers.prewarm(
+                    self.placement[s], self.image(s),
+                    wf.functions[s].cold_start)
+        if engine.straggler_factor and wf.functions[fname].exec_time:
+            budget = engine.straggler_factor * wf.functions[fname].exec_time
+
+            def watchdog():
+                th.join(budget)
+                with state.lock:
+                    done = fname in state.completed
+                if not done and not state.failed:
+                    alt = next(n for n in engine.nodes if n != node)
+                    threading.Thread(
+                        target=self._execute, args=(fname, alt),
+                        kwargs={"duplicate": True}, daemon=True).start()
+            threading.Thread(target=watchdog, daemon=True).start()
+
+    def _execute(self, fname: str, node: str, *,
+                 duplicate: bool = False) -> None:
+        state, wf, engine = self.state, self.wf, self.engine
+        f = wf.functions[fname]
+        containers = engine.containers
+        leased = False
+        try:
+            if containers is not None:
+                # Container acquire happens at launch time — before the
+                # input fetches below block — so a cold boot overlaps the
+                # precursor's execution under the dataflow pattern.
+                cold = containers.acquire(node, self.image(fname),
+                                          f.cold_start)
+                leased = True
+                if cold:
+                    with state.lock:
+                        self.report.cold_starts += 1
+            # A StreamBroken during fetch/execute/emit means an upstream
+            # producer's node died mid-stream; recovery re-runs it and
+            # re-claims the stream, so the consumer retries (bounded)
+            # instead of failing the whole instance.
+            for attempt in range(3):
+                try:
+                    kwargs = self._fetch_inputs(node, f)
+                    if containers is not None:
+                        with containers.slot(node):
+                            result = f.fn(**kwargs) if f.fn else {}
+                    else:
+                        result = f.fn(**kwargs) if f.fn else {}
+                    if not isinstance(result, Mapping):
+                        raise TypeError(
+                            f"{fname} must return a mapping of outputs")
+                    missing = set(f.outputs) - set(result)
+                    if missing:
+                        raise KeyError(f"{fname} missing outputs {missing}")
+                    with state.lock:
+                        first = fname not in state.completed
+                    self._emit_outputs(node, f, result)
+                    break
+                except StreamBroken:
+                    if attempt == 2:
+                        raise
+                    time.sleep(0.05)
+            if duplicate and first:
+                self.report.duplicates_won.append(fname)
+            if not first:
+                return
+            state.mark_done(fname, time.monotonic() - self.t0)
+            # -- optional fault injection: node dies after its first
+            # completion; lost outputs trigger incremental re-execution.
+            if self._inject_failure == node and self._failure_armed.is_set():
+                self._failure_armed.clear()
+                lost = self.store.fail_node(node)
+                self.recover(lost)
+            self._on_complete(fname)
+        except BaseException as exc:   # noqa: BLE001 - report upward
+            state.mark_failed(fname, exc)
+        finally:
+            if leased:
+                containers.release(node, self.image(fname))
+
+    def _on_complete(self, fname: str) -> None:
+        state, wf = self.state, self.wf
+        if self.engine.pattern == "dataflow":
+            for t in dataflow_next_frontier(wf, fname):
+                self._launch(t)
+        else:
+            for s in wf.successors[fname]:
+                with state.lock:
+                    ready = all(p in state.completed
+                                for p in wf.predecessors[s])
+                if ready:
+                    self._launch(s)
+
     # -- input fetch / output publication ----------------------------------
-    def _fetch_inputs(self, store: DStore, node: str,
-                      f: FunctionSpec) -> dict[str, Any]:
+    def _fetch_inputs(self, node: str, f: FunctionSpec) -> dict[str, Any]:
         """One blocking fetch per input (fine-grained retrieval).  Streaming
         inputs arrive as blocking chunk iterators instead: the callable
         starts consuming chunk 0 while its precursor is still emitting
         chunk N (DStream pipelining)."""
+        store, timeout = self.store, self.engine.get_timeout
         return {
-            k: (store.get_stream(node, k, timeout=self.get_timeout)
+            k: (store.get_stream(node, self.ns(k), timeout=timeout)
                 if k in f.stream_inputs
-                else store.get(node, k, timeout=self.get_timeout))
+                else store.get(node, self.ns(k), timeout=timeout))
             for k in f.inputs}
 
-    @staticmethod
-    def _emit_outputs(store: DStore, node: str, f: FunctionSpec,
+    def _emit_outputs(self, node: str, f: FunctionSpec,
                       result: Mapping[str, Any]) -> None:
         """Publish outputs: plain Put, or chunked ``put_stream`` for keys in
         ``f.stream_outputs`` (bytes or any iterable of byte chunks).
         Draining a generator here is what overlaps production with
         downstream pulls; a generator that raises aborts the stream so
         blocked consumers fail fast instead of hanging until timeout."""
+        store = self.store
         for k in f.outputs:
             if k not in f.stream_outputs:
-                store.put(node, k, result[k])
+                store.put(node, self.ns(k), result[k])
                 continue
             value = result[k]
-            writer = store.put_stream(node, k, chunk_size=f.chunk_size)
+            writer = store.put_stream(node, self.ns(k),
+                                      chunk_size=f.chunk_size)
             try:
                 if isinstance(value, (bytes, bytearray, memoryview)):
                     writer.write(value)
@@ -274,38 +359,95 @@ class DFlowEngine:
             writer.close()
 
     # -- beyond-paper incremental recovery --------------------------------
-    def _recover(self, wf: Workflow, placement: dict[str, str],
-                 store: DStore, state: _InstanceState, lost_keys: list[str],
-                 report: RunReport, on_complete) -> None:
-        """Re-execute only producers of lost keys (paper §3.3.5 restarts the
-        whole workflow; we re-run the minimal affected subgraph)."""
-        lost_fns = {wf.producer[k] for k in lost_keys if k in wf.producer}
+    def recover(self, lost_keys: list[str]) -> None:
+        """Re-execute only producers of lost keys *belonging to this
+        instance* (paper §3.3.5 restarts the whole workflow; we re-run the
+        minimal affected subgraph).  ``lost_keys`` are namespaced store
+        keys, e.g. straight from :meth:`DStore.fail_node` — a serving layer
+        hands the same list to every active instance and each recovers its
+        own slice."""
+        wf, state = self.wf, self.state
+        mine = [raw for k in lost_keys
+                if (raw := self.strip_ns(k)) is not None]
+        # External inputs have no producer to re-run — re-stage them from
+        # the retained trigger payload (losing the staging node used to
+        # wedge every consumer until Get timed out).
+        for k in mine:
+            if k in self.inputs and k not in wf.producer:
+                consumers = [f.name for f in wf.functions.values()
+                             if k in f.inputs]
+                node = self.placement[consumers[0]] if consumers \
+                    else self.engine.nodes[0]
+                self.store.put(node, self.ns(k), self.inputs[k])
+        # Chunk records of an in-flight stream map back to the stream key,
+        # whose producer must re-run (it re-claims the aborted stream and
+        # republishes idempotently).
+        lost_fns = {wf.producer[b] for k in mine
+                    if (b := base_key(k)) in wf.producer}
         if not lost_fns:
             return
-        survivors = [n for n in self.nodes]
-        for fname in sorted(lost_fns):
-            with state.lock:
+        survivors = list(self.engine.nodes)
+        relaunch: list[str] = []
+        with state.lock:
+            for fname in sorted(lost_fns):
                 state.completed.pop(fname, None)
                 state.launched.discard(fname)
-            # move to a surviving node (round-robin by hash for determinism)
-            placement[fname] = survivors[hash(fname) % len(survivors)]
-            report.reexecuted.append(fname)
         for fname in sorted(lost_fns):
-            with state.lock:
-                if fname in state.launched:
-                    continue
-                state.launched.add(fname)
-            node = placement[fname]
-            f = wf.functions[fname]
+            # move to a surviving node (round-robin by hash for determinism)
+            self.placement[fname] = survivors[hash(fname) % len(survivors)]
+            self.report.reexecuted.append(fname)
+            relaunch.append(fname)
+        for fname in relaunch:
+            self._launch(fname)
 
-            def rerun(fname=fname, node=node, f=f):
-                try:
-                    kwargs = self._fetch_inputs(store, node, f)
-                    result = f.fn(**kwargs) if f.fn else {}
-                    self._emit_outputs(store, node, f, result)
-                    import time as _t
-                    state.mark_done(fname, _t.monotonic())
-                    on_complete(fname)
-                except BaseException as exc:  # noqa: BLE001
-                    state.mark_failed(fname, exc)
-            threading.Thread(target=rerun, daemon=True).start()
+
+class DFlowEngine:
+    """Execute Workflows of real callables with dataflow invocation.
+
+    ``pattern`` ∈ {"dataflow", "controlflow"} — the §5.5 ablation in real
+    (threaded) form.  ``transport`` may carry a bandwidth to make network
+    time observable.  ``straggler_factor`` (beyond-paper): when a launched
+    function has run longer than factor × its spec exec_time, a duplicate
+    is issued on another node; DStore immutability makes the race benign.
+    ``containers`` (serving): a :class:`repro.core.serve.ContainerService`
+    providing explicit container lifecycle (cold boot / keep-alive /
+    prewarm) and bounded per-node execution slots; ``prewarm`` enables the
+    §3.2 dataflow-triggered prewarm of successor containers at launch.
+    """
+
+    def __init__(self, n_nodes: int = 2, *, pattern: str = "dataflow",
+                 transport: Transport | None = None,
+                 get_timeout: float = 120.0,
+                 straggler_factor: float | None = None,
+                 containers=None, prewarm: bool = True):
+        if pattern not in ("dataflow", "controlflow"):
+            raise ValueError(pattern)
+        self.nodes = [f"node{i}" for i in range(n_nodes)]
+        self.gs = GlobalScheduler(self.nodes)
+        self.pattern = pattern
+        self.transport = transport or Transport()
+        self.get_timeout = get_timeout
+        self.straggler_factor = straggler_factor
+        self.containers = containers
+        self.prewarm = prewarm
+
+    # ------------------------------------------------------------------
+    def start(self, wf: Workflow, inputs: Mapping[str, Any] | None = None,
+              *, store: DStore | None = None, instance: str | None = None,
+              placement: dict[str, str] | None = None,
+              inject_failure: str | None = None) -> InstanceRun:
+        """Launch one instance and return its handle (non-blocking) —
+        the entry point serving layers use to run many instances
+        concurrently over a shared ``store``."""
+        return InstanceRun(self, wf, inputs, store=store, instance=instance,
+                           placement=placement,
+                           inject_failure=inject_failure).start()
+
+    def run(self, wf: Workflow, inputs: Mapping[str, Any] | None = None,
+            *, inject_failure: str | None = None) -> RunReport:
+        """Execute one workflow instance; returns exit-function outputs.
+
+        ``inject_failure``: name of a node that "crashes" right after the
+        first function on it completes — exercises incremental recovery.
+        """
+        return self.start(wf, inputs, inject_failure=inject_failure).wait()

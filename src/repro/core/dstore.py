@@ -41,15 +41,22 @@ from .stream import (DEFAULT_CHUNK, StreamDirectory, StreamReader,  # noqa: E402
                      StreamWriter, chunk_key)
 
 
+# Imported at module load, not inside _sizeof: a lazy import there put a
+# ~100 ms one-time cost on the first Put of the process — which under
+# DServe lands squarely on the first request's critical path.
+try:
+    import numpy as _np
+except Exception:  # pragma: no cover - numpy is optional for sizing
+    _np = None
+
+
 def _sizeof(value: Any) -> int:
     try:
-        import numpy as np
-
         if hasattr(value, "nbytes"):
             return int(value.nbytes)
         if isinstance(value, (bytes, bytearray)):
             return len(value)
-        if isinstance(value, np.ndarray):
+        if _np is not None and isinstance(value, _np.ndarray):
             return int(value.nbytes)
     except Exception:  # pragma: no cover - best effort sizing
         pass
@@ -131,6 +138,15 @@ class DataDirectoryService:
             for k in keys:
                 self._meta.pop(k, None)
 
+    def drop_prefix(self, prefix: str) -> list[str]:
+        """Instance-scoped eviction: delete every record whose key starts
+        with ``prefix`` (a completed instance's namespace); returns them."""
+        with self._cv:
+            dropped = [k for k in self._meta if k.startswith(prefix)]
+            for k in dropped:
+                del self._meta[k]
+        return dropped
+
     def drop_node(self, node: str) -> list[str]:
         """Remove every replica hosted on a failed node; returns keys that
         lost their last replica (those must be recomputed)."""
@@ -167,6 +183,11 @@ class LocalStore:
     def drop_all(self) -> None:
         with self._lock:
             self._data.clear()
+
+    def drop_prefix(self, prefix: str) -> None:
+        with self._lock:
+            for k in [k for k in self._data if k.startswith(prefix)]:
+                del self._data[k]
 
 
 class Transport:
@@ -281,6 +302,18 @@ class DStore:
             self.stores[node].write(ck, chunk)
             self.directory.publish(ck, len(chunk), node)
         self.streams.publish_chunk(key, idx, len(chunk))
+
+    def evict_instance(self, prefix: str) -> None:
+        """Instance-scoped eviction (serving): when a workflow instance
+        completes, reclaim every key in its namespace — bytes in all local
+        stores, directory records, and stream records (chunk keys share the
+        instance prefix, so they are swept by the same pass).  Bounded
+        memory under sustained multi-instance serving."""
+        with self._write_lock:
+            for store in self.stores.values():
+                store.drop_prefix(prefix)
+            self.directory.drop_prefix(prefix)
+        self.streams.evict_prefix(prefix)
 
     # -- fault handling ----------------------------------------------------
     def fail_node(self, node: str) -> list[str]:

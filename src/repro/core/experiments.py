@@ -17,6 +17,10 @@ import math
 from dataclasses import dataclass, field
 
 from .dag import Workflow
+# percentile is re-exported here (public API); one implementation, shared
+# with the serving layer (serve.py cannot import this module — it would
+# close an import cycle via sim_systems).
+from .serve import percentile, poisson_arrivals
 from .sim import Env, all_of
 from .sim_systems import SimSystem, make_system
 from .simcluster import Cluster, SimConfig
@@ -25,18 +29,6 @@ __all__ = ["ExperimentResult", "run_open_loop", "run_closed_loop",
            "cold_start_latency", "percentile"]
 
 
-def percentile(values: list[float], q: float) -> float:
-    """Linear-interpolated percentile (q in [0,100])."""
-    if not values:
-        return math.nan
-    v = sorted(values)
-    if len(v) == 1:
-        return v[0]
-    pos = (len(v) - 1) * q / 100.0
-    lo = int(math.floor(pos))
-    hi = min(lo + 1, len(v) - 1)
-    frac = pos - lo
-    return v[lo] * (1 - frac) + v[hi] * frac
 
 
 @dataclass
@@ -99,13 +91,22 @@ def _collect(sys_: SimSystem, cluster: Cluster, cfg: SimConfig,
 def run_open_loop(system: str, wf: Workflow, *, rate_per_min: float,
                   n_invocations: int = 30,
                   cfg: SimConfig | None = None,
-                  warm: bool = True) -> ExperimentResult:
-    """Fire ``n_invocations`` at fixed inter-arrival 60/rate seconds."""
+                  warm: bool = True,
+                  poisson_seed: int | None = None) -> ExperimentResult:
+    """Fire ``n_invocations`` at fixed inter-arrival 60/rate seconds, or —
+    with ``poisson_seed`` — at deterministic Poisson arrivals of the same
+    mean rate (the serving layer's open-loop arrival process)."""
     cfg = cfg or SimConfig()
     env = Env()
     cluster = Cluster(env, cfg)
     sys_ = make_system(system, env, cluster, wf)
     gap = 60.0 / rate_per_min
+    if poisson_seed is None:
+        gaps = [gap] * n_invocations
+    else:
+        arr = poisson_arrivals(rate_per_min / 60.0, n_invocations,
+                               seed=poisson_seed)
+        gaps = [b - a for a, b in zip([0.0] + arr[:-1], arr)]
 
     if warm:
         # One throwaway invocation to populate warm containers, as the
@@ -117,12 +118,15 @@ def run_open_loop(system: str, wf: Workflow, *, rate_per_min: float,
         cluster.network.busy_time = 0.0
 
     def driver():
-        for i in range(n_invocations):
+        for g in gaps:
             sys_.invoke()
-            yield env.timeout(gap)
+            yield env.timeout(g)
     start = env.now
     env.process(driver())
-    horizon = start + gap * n_invocations + cfg.timeout * 3
+    # Horizon from the ACTUAL last arrival (Poisson gap sums can exceed
+    # gap*n by several sigma; a fixed-gap horizon would cut the tail off
+    # and silently clamp its latencies to the timeout).
+    horizon = start + sum(gaps) + cfg.timeout * 3
     env.run(until=horizon)
     return _collect(sys_, cluster, cfg, makespan=env.now - start)
 

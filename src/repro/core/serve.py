@@ -1,0 +1,552 @@
+"""DServe — concurrent multi-instance serving with explicit container pools.
+
+The paper's headline wins are tail latency under load and a 5.6x cold-start
+reduction (§5.4), but a single-instance engine cannot exhibit either: both
+require many workflow instances in flight sharing one cluster's containers
+and one DStore.  This module adds the serving substrate:
+
+* :class:`ContainerPool` — an explicit, clock-agnostic container lifecycle
+  model for one (node, function-image) pair: cold boot, warm reuse,
+  keep-alive TTL eviction, and *dataflow-triggered prewarm* (paper §3.2: a
+  function's container starts booting when its **precursor launches**, not
+  when its inputs arrive, so boot time overlaps precursor execution).  The
+  model is pure state + timestamps — every method takes ``now`` and returns
+  delays — so the *same* lifecycle (and the same metrics: cold starts,
+  warm/prewarm hits, evictions, container-seconds) backs both the threaded
+  engine (wall clock) and the discrete-event simulator (virtual clock, via
+  :class:`repro.core.simcluster._ContainerPool`).
+* :class:`ContainerService` — thread-safe wall-clock adapter used by
+  :class:`~repro.core.dscheduler.DFlowEngine`: per-(node, image) pools plus
+  a bounded per-node execution-slot semaphore (per-node concurrency cap).
+* :func:`poisson_arrivals` / :func:`trace_arrivals` — open-loop arrival
+  processes (deterministic LCG exponential gaps; no global RNG).
+* :class:`DServe` — the serving layer: drives N concurrent workflow
+  instances through one shared engine + DStore with per-instance key
+  namespacing (``"<wf>#<i>:<key>"``), instance-scoped eviction on
+  completion, optional node-failure injection with per-instance incremental
+  recovery, and a :class:`ServeReport` aggregating p50/p95/p99 latency,
+  cold-start counts, and container-seconds.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterable, Mapping, Sequence
+
+__all__ = [
+    "ContainerPool", "ContainerService", "DServe", "ServeReport",
+    "InstanceStat", "percentile", "poisson_arrivals", "trace_arrivals",
+]
+
+
+# ----------------------------------------------------------------------
+# Container lifecycle model (pure; shared by engine and simulator)
+# ----------------------------------------------------------------------
+
+@dataclass
+class _Container:
+    boot_at: float                   # when the boot started
+    ready_at: float                  # when the boot completes (<= now: ready)
+    busy: bool                       # leased to a running function
+    idle_since: float                # last release time (TTL anchor)
+
+
+class ContainerPool:
+    """Lifecycle of containers for one (node, function-image) pair.
+
+    Clock-agnostic: callers supply ``now`` (wall clock in the threaded
+    engine, ``env.now`` in the simulator) and receive *delays*.  Metrics:
+
+    * ``cold_starts``    — boots paid on the request path (a function had to
+      start a container and wait out the full ``cold_start``).
+    * ``prewarm_boots``  — boots started ahead of need (off the request
+      path); ``boots = cold_starts + prewarm_boots``.
+    * ``warm_hits``      — acquires served instantly by an idle container.
+    * ``prewarm_hits``   — acquires that joined a container still booting
+      (they wait only the residual boot time — the §3.2 overlap).
+    * ``evictions`` / ``container_seconds`` — keep-alive TTL reclaim and the
+      aggregate container occupancy (the cost axis of a serving system).
+    """
+
+    def __init__(self, image: str = "", *, cold_start: float = 0.5,
+                 keepalive: float = 600.0):
+        if cold_start < 0 or keepalive <= 0:
+            raise ValueError("cold_start must be >= 0 and keepalive > 0")
+        self.image = image
+        self.cold_start = float(cold_start)
+        self.keepalive = float(keepalive)
+        self._containers: list[_Container] = []
+        self.cold_starts = 0
+        self.prewarm_boots = 0
+        self.warm_hits = 0
+        self.prewarm_hits = 0
+        self.evictions = 0
+        self._finalized_seconds = 0.0
+
+    # -- derived state -----------------------------------------------------
+    @property
+    def boots(self) -> int:
+        return self.cold_starts + self.prewarm_boots
+
+    def idle_count(self, now: float) -> int:
+        """Containers ready and idle at ``now`` (classic "warm count")."""
+        return sum(1 for c in self._containers
+                   if not c.busy and c.ready_at <= now)
+
+    def available(self, now: float) -> int:
+        """Idle containers including ones still booting (joinable)."""
+        del now
+        return sum(1 for c in self._containers if not c.busy)
+
+    def live(self) -> int:
+        return len(self._containers)
+
+    def container_seconds(self, now: float) -> float:
+        """Aggregate occupancy: evicted containers' lifetimes plus the age
+        of every container still alive at ``now``."""
+        return self._finalized_seconds + sum(
+            max(now, c.boot_at) - c.boot_at for c in self._containers)
+
+    # -- lifecycle ---------------------------------------------------------
+    def sweep(self, now: float) -> int:
+        """Evict idle containers whose keep-alive TTL expired; returns how
+        many were reclaimed (the simulator releases capacity per eviction)."""
+        evicted = 0
+        keep: list[_Container] = []
+        for c in self._containers:
+            expires = max(c.idle_since, c.ready_at) + self.keepalive
+            if not c.busy and expires <= now:
+                self._finalized_seconds += expires - c.boot_at
+                self.evictions += 1
+                evicted += 1
+            else:
+                keep.append(c)
+        self._containers = keep
+        return evicted
+
+    def try_acquire_warm(self, now: float) -> float | None:
+        """Lease an existing container: 0.0 for a ready idle one, the
+        residual boot delay for one still booting, None if a cold boot is
+        required.  Marks the chosen container busy."""
+        self.sweep(now)
+        ready = [c for c in self._containers
+                 if not c.busy and c.ready_at <= now]
+        if ready:
+            # MRU reuse keeps the rest of the fleet evictable by TTL.
+            c = max(ready, key=lambda c: c.idle_since)
+            c.busy = True
+            self.warm_hits += 1
+            return 0.0
+        booting = [c for c in self._containers if not c.busy]
+        if booting:
+            c = min(booting, key=lambda c: c.ready_at)
+            c.busy = True
+            self.prewarm_hits += 1
+            return c.ready_at - now
+        return None
+
+    def acquire(self, now: float) -> tuple[float, bool]:
+        """Lease a container; returns ``(delay_until_ready, was_cold)``."""
+        d = self.try_acquire_warm(now)
+        if d is not None:
+            return d, False
+        self._containers.append(
+            _Container(boot_at=now, ready_at=now + self.cold_start,
+                       busy=True, idle_since=now))
+        self.cold_starts += 1
+        return self.cold_start, True
+
+    def release(self, now: float) -> None:
+        """Return a leased container to the idle (warm) set."""
+        for c in self._containers:
+            if c.busy:
+                c.busy = False
+                c.idle_since = max(now, c.ready_at)
+                self.sweep(now)
+                return
+        raise RuntimeError(f"pool {self.image!r}: release without acquire")
+
+    def prewarm(self, now: float) -> float:
+        """Start booting one container ahead of need (paper §3.2 prewarm
+        trigger: called when the function's *precursor launches*).  No-op if
+        an idle or booting container already exists.  Returns the delay
+        until an idle container will be ready."""
+        self.sweep(now)
+        idle = [c for c in self._containers if not c.busy]
+        if idle:
+            return max(0.0, min(c.ready_at for c in idle) - now)
+        self._containers.append(
+            _Container(boot_at=now, ready_at=now + self.cold_start,
+                       busy=False, idle_since=now + self.cold_start))
+        self.prewarm_boots += 1
+        return self.cold_start
+
+    def shutdown(self, now: float) -> float:
+        """Retire every container; returns total container-seconds."""
+        for c in self._containers:
+            self._finalized_seconds += max(now, c.boot_at) - c.boot_at
+        self._containers = []
+        return self._finalized_seconds
+
+
+# ----------------------------------------------------------------------
+# Threaded adapter (wall clock) used by DFlowEngine / DServe
+# ----------------------------------------------------------------------
+
+class ContainerService:
+    """Wall-clock container service: per-(node, image) pools + per-node
+    bounded execution slots.
+
+    ``acquire`` blocks the calling function thread for the boot delay (cold
+    or residual prewarm); booting needs no background thread because
+    readiness is purely a timestamp in the shared lifecycle model.
+    ``slot(node)`` bounds how many functions *execute* concurrently per
+    node (the cores cap); container acquisition is deliberately outside the
+    slot so launched-but-blocked dataflow functions cannot deadlock the
+    executing ones.
+    """
+
+    def __init__(self, nodes: Sequence[str], *, keepalive: float = 600.0,
+                 max_per_node: int = 8, cold_start: float | None = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 sleep: Callable[[float], None] = time.sleep):
+        self.nodes = list(nodes)
+        self.keepalive = float(keepalive)
+        self.cold_start_override = cold_start
+        self._clock = clock
+        self._sleep = sleep
+        self._lock = threading.Lock()
+        self._pools: dict[tuple[str, str], ContainerPool] = {}
+        self._slots = {n: threading.Semaphore(int(max_per_node))
+                       for n in self.nodes}
+
+    def pool(self, node: str, image: str,
+             cold_start: float = 0.5) -> ContainerPool:
+        if self.cold_start_override is not None:
+            cold_start = self.cold_start_override
+        p = self._pools.get((node, image))
+        if p is None:
+            p = self._pools[(node, image)] = ContainerPool(
+                image, cold_start=cold_start, keepalive=self.keepalive)
+        return p
+
+    def acquire(self, node: str, image: str, cold_start: float = 0.5) -> bool:
+        """Lease a container, sleeping out its boot delay; returns whether
+        the request paid a full cold start."""
+        with self._lock:
+            delay, cold = self.pool(node, image, cold_start).acquire(
+                self._clock())
+        if delay > 0:
+            self._sleep(delay)
+        return cold
+
+    def release(self, node: str, image: str) -> None:
+        with self._lock:
+            self._pools[(node, image)].release(self._clock())
+
+    def prewarm(self, node: str, image: str, cold_start: float = 0.5) -> None:
+        """Dataflow-triggered prewarm (§3.2): begin booting the function's
+        container the moment its precursor launches.  Returns immediately —
+        readiness is a timestamp, not a thread."""
+        with self._lock:
+            self.pool(node, image, cold_start).prewarm(self._clock())
+
+    @contextmanager
+    def slot(self, node: str):
+        """Bounded per-node execution slot (acquired only for fn runtime)."""
+        self._slots[node].acquire()
+        try:
+            yield
+        finally:
+            self._slots[node].release()
+
+    # -- aggregate metrics -------------------------------------------------
+    def _total(self, attr: str) -> int:
+        with self._lock:
+            return sum(getattr(p, attr) for p in self._pools.values())
+
+    @property
+    def cold_starts(self) -> int:
+        return self._total("cold_starts")
+
+    @property
+    def prewarm_boots(self) -> int:
+        return self._total("prewarm_boots")
+
+    @property
+    def warm_hits(self) -> int:
+        return self._total("warm_hits")
+
+    @property
+    def prewarm_hits(self) -> int:
+        return self._total("prewarm_hits")
+
+    @property
+    def evictions(self) -> int:
+        return self._total("evictions")
+
+    def container_seconds(self) -> float:
+        with self._lock:
+            now = self._clock()
+            return sum(p.container_seconds(now)
+                       for p in self._pools.values())
+
+
+# ----------------------------------------------------------------------
+# Open-loop arrival processes
+# ----------------------------------------------------------------------
+
+def poisson_arrivals(rate_per_s: float, n: int,
+                     seed: int = 0) -> list[float]:
+    """Deterministic Poisson process: ``n`` arrival times (seconds from
+    t=0) with exponential inter-arrival gaps of mean ``1/rate`` drawn from
+    a seeded LCG (no global RNG — every experiment is reproducible)."""
+    if rate_per_s <= 0:
+        raise ValueError("rate_per_s must be positive")
+    s = (seed * 2654435761 + 0x9E3779B9) & 0xFFFFFFFF
+    t, out = 0.0, []
+    for _ in range(n):
+        s = (1103515245 * s + 12345) & 0x7FFFFFFF
+        u = (s + 1) / (0x7FFFFFFF + 2)          # u in (0, 1)
+        t += -math.log(u) / rate_per_s
+        out.append(t)
+    return out
+
+
+def trace_arrivals(times: Iterable[float]) -> list[float]:
+    """Trace-driven arrivals: validate + sort a recorded timestamp list."""
+    out = sorted(float(t) for t in times)
+    if out and out[0] < 0:
+        raise ValueError("trace timestamps must be >= 0")
+    return out
+
+
+# ----------------------------------------------------------------------
+# Serving layer
+# ----------------------------------------------------------------------
+
+@dataclass
+class InstanceStat:
+    instance: str
+    arrival: float                   # seconds from serve start
+    latency: float = math.nan        # end-to-end (start -> all done)
+    ok: bool = False
+    error: str = ""
+    reexecuted: int = 0
+    outputs: dict = field(default_factory=dict)   # sink outputs (response)
+
+
+def percentile(values: list[float], q: float) -> float:
+    """Linear-interpolated percentile (q in [0,100]).  The project's one
+    implementation — ``repro.core.experiments`` re-exports it."""
+    if not values:
+        return math.nan
+    v = sorted(values)
+    pos = (len(v) - 1) * q / 100.0
+    lo = int(math.floor(pos))
+    hi = min(lo + 1, len(v) - 1)
+    frac = pos - lo
+    return v[lo] * (1 - frac) + v[hi] * frac
+
+
+@dataclass
+class ServeReport:
+    """Aggregate of one open-loop serving run (consumed by
+    ``benchmarks/serve_load.py`` and ``benchmarks/fig12_coldstart.py``)."""
+
+    workflow: str
+    pattern: str
+    stats: list[InstanceStat] = field(default_factory=list)
+    wall_time: float = 0.0
+    max_concurrency: int = 0
+    cold_starts: int = 0             # request-path cold boots
+    prewarm_boots: int = 0
+    warm_hits: int = 0
+    prewarm_hits: int = 0
+    evictions: int = 0
+    container_seconds: float = 0.0
+
+    @property
+    def latencies(self) -> list[float]:
+        return [s.latency for s in self.stats if s.ok]
+
+    @property
+    def failures(self) -> int:
+        return sum(1 for s in self.stats if not s.ok)
+
+    @property
+    def p50(self) -> float:
+        return percentile(self.latencies, 50.0)
+
+    @property
+    def p95(self) -> float:
+        return percentile(self.latencies, 95.0)
+
+    @property
+    def p99(self) -> float:
+        return percentile(self.latencies, 99.0)
+
+    def row(self) -> dict:
+        return {
+            "workflow": self.workflow, "pattern": self.pattern,
+            "n": len(self.stats), "failures": self.failures,
+            "p50_s": round(self.p50, 4), "p95_s": round(self.p95, 4),
+            "p99_s": round(self.p99, 4),
+            "max_concurrency": self.max_concurrency,
+            "cold_starts": self.cold_starts,
+            "prewarm_boots": self.prewarm_boots,
+            "warm_hits": self.warm_hits,
+            "prewarm_hits": self.prewarm_hits,
+            "container_seconds": round(self.container_seconds, 3),
+        }
+
+
+class DServe:
+    """Open-loop serving of one workflow: N concurrent instances through a
+    shared :class:`~repro.core.dscheduler.DFlowEngine`, one shared DStore
+    (per-instance key namespacing), and one :class:`ContainerService`.
+
+    ``prewarm`` toggles the §3.2 dataflow-triggered prewarm of successor
+    containers at precursor launch.  It is strictly a dataflow-pattern
+    mechanism — the engine ignores it under ``pattern="controlflow"``,
+    whose baseline semantics boot a container only when a function becomes
+    ready (the §5.5 ablation).
+    """
+
+    def __init__(self, wf, *, n_nodes: int = 2, pattern: str = "dataflow",
+                 prewarm: bool | None = None, keepalive: float = 600.0,
+                 max_per_node: int = 8, cold_start: float | None = None,
+                 transport=None, get_timeout: float = 30.0,
+                 evict_on_complete: bool = True):
+        from .dscheduler import DFlowEngine
+        from .dstore import DStore
+
+        self.wf = wf
+        self.pattern = pattern
+        if prewarm is None:
+            prewarm = pattern == "dataflow"
+        self.containers = ContainerService(
+            [f"node{i}" for i in range(n_nodes)], keepalive=keepalive,
+            max_per_node=max_per_node, cold_start=cold_start)
+        self.engine = DFlowEngine(n_nodes=n_nodes, pattern=pattern,
+                                  transport=transport,
+                                  get_timeout=get_timeout,
+                                  containers=self.containers,
+                                  prewarm=prewarm)
+        self.store = DStore(self.engine.nodes, self.engine.transport)
+        self.placement = self.engine.gs.assign(wf)
+        self.evict_on_complete = evict_on_complete
+        self._lock = threading.Lock()
+        self._active: dict[str, Any] = {}      # instance -> InstanceRun
+        self.max_concurrency = 0
+
+    # ------------------------------------------------------------------
+    def fail_node(self, node: str) -> list[str]:
+        """Kill a node: every active instance incrementally recovers the
+        functions whose outputs it lost (its own namespace only)."""
+        lost = self.store.fail_node(node)
+        with self._lock:
+            active = list(self._active.values())
+        for run in active:
+            run.recover(lost)
+        return lost
+
+    # ------------------------------------------------------------------
+    def run(self, arrivals: Sequence[float],
+            inputs: Mapping[str, Any] | Callable[[int], Mapping[str, Any]]
+            | None = None, *,
+            fail_node_at: tuple[float, str] | None = None) -> ServeReport:
+        """Drive one open-loop run: instance ``i`` starts at
+        ``arrivals[i]`` seconds (wall clock) after the run begins.
+
+        ``inputs`` may be a static mapping (shared by every instance) or a
+        callable ``i -> mapping`` for per-instance payloads.
+        ``fail_node_at=(t, node)`` kills ``node`` ``t`` seconds into the
+        run (per-instance incremental recovery keeps instances alive).
+        """
+        arrivals = sorted(float(a) for a in arrivals)
+        report = ServeReport(workflow=self.wf.name, pattern=self.pattern)
+        stats = [InstanceStat(instance=f"{self.wf.name}#{i}", arrival=a)
+                 for i, a in enumerate(arrivals)]
+        report.stats = stats
+        # Snapshot container metrics so the report covers THIS run only
+        # (the service — and its warm containers — outlives runs).
+        svc = self.containers
+        base = dict(cold_starts=svc.cold_starts,
+                    prewarm_boots=svc.prewarm_boots,
+                    warm_hits=svc.warm_hits,
+                    prewarm_hits=svc.prewarm_hits,
+                    evictions=svc.evictions,
+                    container_seconds=svc.container_seconds())
+        self.max_concurrency = 0             # per-run high-water mark
+        t0 = time.monotonic()
+        threads: list[threading.Thread] = []
+
+        killer = None
+        if fail_node_at is not None:
+            t_fail, node = fail_node_at
+
+            def kill():
+                delay = t_fail - (time.monotonic() - t0)
+                if delay > 0:
+                    time.sleep(delay)
+                self.fail_node(node)
+            killer = threading.Thread(target=kill, daemon=True,
+                                      name="dserve-failure")
+            killer.start()
+
+        def finish(stat: InstanceStat, run) -> None:
+            try:
+                rep = run.wait()
+                stat.latency = rep.wall_time
+                stat.reexecuted = len(rep.reexecuted)
+                stat.outputs = rep.outputs
+                stat.ok = True
+            except BaseException as exc:        # noqa: BLE001 - recorded
+                stat.error = f"{type(exc).__name__}: {exc}"
+            finally:
+                with self._lock:
+                    self._active.pop(stat.instance, None)
+                if self.evict_on_complete:
+                    self.store.evict_instance(f"{stat.instance}:")
+
+        from .dscheduler import InstanceRun
+
+        for i, stat in enumerate(stats):
+            delay = stat.arrival - (time.monotonic() - t0)
+            if delay > 0:
+                time.sleep(delay)
+            payload = inputs(i) if callable(inputs) else inputs
+            run = InstanceRun(self.engine, self.wf, payload,
+                              store=self.store, instance=stat.instance,
+                              placement=self.placement)
+            # Register BEFORE starting: a node failure racing the start
+            # must already see this instance to hand it its lost keys.
+            with self._lock:
+                self._active[stat.instance] = run
+                self.max_concurrency = max(self.max_concurrency,
+                                           len(self._active))
+            run.start()
+            th = threading.Thread(target=finish, args=(stat, run),
+                                  daemon=True, name=f"dserve-{stat.instance}")
+            th.start()
+            threads.append(th)
+
+        for th in threads:
+            th.join(self.engine.get_timeout * 2)
+        if killer is not None:
+            killer.join(1.0)
+        report.wall_time = time.monotonic() - t0
+        report.max_concurrency = self.max_concurrency
+        report.cold_starts = svc.cold_starts - base["cold_starts"]
+        report.prewarm_boots = svc.prewarm_boots - base["prewarm_boots"]
+        report.warm_hits = svc.warm_hits - base["warm_hits"]
+        report.prewarm_hits = svc.prewarm_hits - base["prewarm_hits"]
+        report.evictions = svc.evictions - base["evictions"]
+        report.container_seconds = (svc.container_seconds()
+                                    - base["container_seconds"])
+        return report

@@ -140,7 +140,14 @@ class SimSystem:
 
     # -- shared function body -------------------------------------------
     def _acquire_container(self, node: str, fname: str):
-        """yields startup delay handling sandbox (KNIX) vs per-fn container."""
+        """yields startup delay handling sandbox (KNIX) vs per-fn container.
+
+        Pool-backed: the per-(node, image) pool delegates to the shared
+        container lifecycle model (:class:`repro.core.serve.ContainerPool`
+        via :class:`repro.core.simcluster._ContainerPool`) — warm reuse,
+        joining an in-flight prewarm boot, keep-alive TTL eviction, and the
+        cold-start metrics all come from the same code the threaded
+        serving layer uses."""
         n = self.cluster.nodes[node]
         if self.sandbox:
             boot = self._sandbox_booted.get(node)
@@ -277,7 +284,7 @@ class SimSystem:
                     if self.placement[fn2] != node:
                         continue
                     pool = self.cluster.nodes[node].pool(self.image(fn2))
-                    if pool.warm == 0:
+                    if pool.available == 0:   # nothing idle NOR booting
                         pool.prewarm()
 
         def local_on_complete(fname: str):

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+from .serve import ContainerPool
 from .sim import Env, Event, Network, Resource
 
 __all__ = ["SimConfig", "Node", "Cluster", "MASTER"]
@@ -36,6 +37,7 @@ class SimConfig:
     redis_bw_eff: float = 0.95
     stream_chunk: float = 1e6             # DStream chunk size (B)
     cold_start: float = 0.8               # container cold boot (docker run)
+    keepalive: float = 600.0              # warm-container TTL (paper: 600 s)
     knix_process_start: float = 0.02      # KNIX in-container process fork
     max_containers: int = 96              # 32GB / 256MB, with headroom
     timeout: float = 60.0                 # experiment timeout (paper: 60 s)
@@ -48,47 +50,91 @@ class SimConfig:
 
 
 class _ContainerPool:
-    """Warm-container pool for one (node, function-image) pair.
+    """Container pool for one (node, function-image) pair — a virtual-clock
+    adapter over the shared lifecycle model
+    (:class:`repro.core.serve.ContainerPool`), so the simulator and the
+    threaded serving layer share one implementation of cold boot, warm
+    reuse, keep-alive TTL eviction, prewarm, and the derived metrics.
 
-    ``acquire`` yields the startup delay: 0 for a warm hit, ``cold_start``
-    otherwise.  Containers are kept warm after release (the paper keeps a
-    600 s lifetime; our experiments are shorter than that, so warm = forever).
+    ``acquire`` yields the startup delay: 0 for a warm hit, the residual
+    boot time when joining a container that is already booting (a prewarm
+    in flight), ``cold_start`` otherwise.  Booted containers hold one slot
+    of the node's container capacity until TTL eviction reclaims it.
     """
 
-    def __init__(self, env: Env, cold_start: float, cap: Resource):
+    def __init__(self, env: Env, cold_start: float, cap: Resource,
+                 keepalive: float = 600.0):
         self.env = env
-        self.cold_start = cold_start
         self.cap = cap
-        self.warm = 0
-        self.cold_starts = 0            # metric: how many cold boots happened
+        self.model = ContainerPool(cold_start=cold_start,
+                                   keepalive=keepalive)
+        self._cap_released = 0
 
+    # -- back-compat metrics/state ---------------------------------------
+    @property
+    def cold_starts(self) -> int:
+        """Total container boots (request-path + prewarm), the paper's
+        cold-start count metric."""
+        return self.model.boots
+
+    @property
+    def warm(self) -> int:
+        """Idle containers ready right now."""
+        return self.model.idle_count(self.env.now)
+
+    @property
+    def available(self) -> int:
+        """Idle containers including ones still booting (joinable)."""
+        return self.model.available(self.env.now)
+
+    def _reconcile_cap(self) -> None:
+        """Release node capacity for containers the model TTL-evicted."""
+        while self._cap_released < self.model.evictions:
+            self._cap_released += 1
+            self.cap.release()
+
+    # -- lifecycle --------------------------------------------------------
     def acquire(self):
-        if self.warm > 0:
-            self.warm -= 1
-            return self.env.timeout(0.0, 0.0)
+        delay = self.model.try_acquire_warm(self.env.now)
+        self._reconcile_cap()
+        if delay is not None:
+            return self.env.timeout(delay, delay)
         done = self.env.event()
 
         def boot(_):
-            self.cold_starts += 1
-            self.env._at(self.env.now + self.cold_start, done.trigger,
-                         self.cold_start)
+            boots_before = self.model.boots
+            d, _cold = self.model.acquire(self.env.now)
+            if self.model.boots == boots_before:
+                # A container became idle while we were queued on capacity:
+                # no new boot happened, so hand the slot straight back
+                # (otherwise the node's effective capacity leaks away).
+                self.cap.release()
+            self._reconcile_cap()
+            self.env._at(self.env.now + d, done.trigger, d)
         self.cap.acquire().add_waiter(boot)
         return done
 
     def release(self) -> None:
-        self.warm += 1
+        self.model.release(self.env.now)
+        self._reconcile_cap()
 
     def prewarm(self) -> Event:
-        """Boot one container ahead of need (counts as a cold boot)."""
+        """Boot one container ahead of need; triggers when one is ready.
+        No-op (beyond waiting) if an idle or booting container exists."""
         done = self.env.event()
+        if self.model.available(self.env.now) > 0:
+            d = self.model.prewarm(self.env.now)     # joins existing boot
+            self._reconcile_cap()
+            self.env._at(self.env.now + d, done.trigger, None)
+            return done
 
         def boot(_):
-            self.cold_starts += 1
-
-            def ready(_):
-                self.warm += 1
-                done.trigger(None)
-            self.env._at(self.env.now + self.cold_start, ready)
+            boots_before = self.model.boots
+            d = self.model.prewarm(self.env.now)
+            if self.model.boots == boots_before:
+                self.cap.release()          # idle appeared while queued
+            self._reconcile_cap()
+            self.env._at(self.env.now + d, done.trigger, None)
         self.cap.acquire().add_waiter(boot)
         return done
 
@@ -108,7 +154,7 @@ class Node:
             p = _ContainerPool(
                 self.env,
                 self.cfg.cold_start if cold_start is None else cold_start,
-                self.container_cap)
+                self.container_cap, keepalive=self.cfg.keepalive)
             self._pools[image] = p
         return p
 

@@ -39,15 +39,25 @@ from dataclasses import dataclass, field
 from typing import Any, Iterable, Iterator
 
 __all__ = ["StreamBroken", "StreamDirectory", "StreamWriter", "StreamReader",
-           "chunk_key", "DEFAULT_CHUNK"]
+           "chunk_key", "base_key", "DEFAULT_CHUNK"]
 
 DEFAULT_CHUNK = 1 << 18          # 256 KiB
 _PREFETCH_DEPTH = 32             # reader-side bounded chunk queue
 
 
+_CHUNK_SEP = "::chunk."
+
+
 def chunk_key(key: str, i: int) -> str:
     """Directory key of one chunk of a stream (immutable, like any key)."""
-    return f"{key}::chunk.{i}"
+    return f"{key}{_CHUNK_SEP}{i}"
+
+
+def base_key(key: str) -> str:
+    """Inverse of :func:`chunk_key`: chunk key -> stream key (identity for
+    plain keys).  Recovery uses this to map lost *chunk* records back to
+    the producer function that must re-run."""
+    return key.split(_CHUNK_SEP, 1)[0]
 
 
 class StreamBroken(RuntimeError):
@@ -129,6 +139,16 @@ class StreamDirectory:
         with self._cv:
             self._plain.add(key)
             self._cv.notify_all()
+
+    def evict_prefix(self, prefix: str) -> None:
+        """Instance-scoped eviction: forget every stream (and plain-key
+        marker) in a completed instance's namespace.  Chunk *bytes* live in
+        the LocalStores and are reclaimed by the caller
+        (:meth:`DStore.evict_instance`)."""
+        with self._cv:
+            for k in [k for k in self._streams if k.startswith(prefix)]:
+                del self._streams[k]
+            self._plain -= {k for k in self._plain if k.startswith(prefix)}
 
     def fail_owner(self, node: str) -> None:
         """Fault handling for a dead node.  Streams it co-wrote lose that
@@ -246,11 +266,19 @@ class StreamWriter:
             self._buf = bytearray()
         self._store.streams.close(self.key, self._count)
         # Monolithic twin for non-streaming Gets / sink collection, built
-        # from the chunks already resident in the local store.
+        # from the chunks already resident in the local store.  If the node
+        # was failed mid-stream (chunks wiped under us), surface it as
+        # StreamBroken: the engine's retry re-runs the producer, which
+        # rewrites every chunk idempotently and closes cleanly.
         local = self._store.stores[self.node]
-        self._store.put(self.node, self.key,
-                        b"".join(local.read(chunk_key(self.key, i))
-                                 for i in range(self._count)))
+        try:
+            whole = b"".join(local.read(chunk_key(self.key, i))
+                             for i in range(self._count))
+        except KeyError:
+            raise StreamBroken(
+                f"stream {self.key!r}: local chunks lost before close "
+                f"(node failed mid-stream)") from None
+        self._store.put(self.node, self.key, whole)
 
     def __enter__(self) -> "StreamWriter":
         return self

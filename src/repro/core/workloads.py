@@ -17,7 +17,8 @@ from .dag import FunctionSpec, Workflow
 
 __all__ = ["BENCHMARKS", "make_workflow", "wordcount", "file_processing",
            "cycles", "epigenomics", "genome", "soykb",
-           "wordcount_large", "genome_large"]
+           "wordcount_large", "genome_large",
+           "serving_chain", "serving_fanout"]
 
 MB = 1 << 20
 
@@ -228,6 +229,92 @@ def genome_large(individuals: int = 12, analyses: int = 8) -> Workflow:
     return Workflow("Gen-L", fns, {"chromosome": int(32 * MB)})
 
 
+# ----------------------------------------------------------------------
+# Serving workloads: small request-scale DAGs with *real callables* so the
+# threaded DServe layer (repro.core.serve) can execute them end-to-end.
+# Execution sleeps `exec_time` and emits a deterministic digest-derived
+# payload, so differential/serving tests can assert exact bytes while the
+# container-pool dynamics (cold boot vs prewarm) stay observable.
+
+def _digest_fn(out_key: str, exec_time: float, payload: int):
+    import hashlib
+    import time as _time
+
+    def fn(**kw):
+        if exec_time:
+            _time.sleep(exec_time)
+        h = hashlib.sha256(out_key.encode())
+        for k in sorted(kw):
+            v = kw[k]
+            h.update(k.encode())
+            h.update(v if isinstance(v, (bytes, bytearray))
+                     else repr(v).encode())
+        d = h.digest()
+        return {out_key: (d * (payload // len(d) + 1))[:payload]}
+    return fn
+
+
+def serving_chain(stages: int = 4, *, exec_time: float = 0.03,
+                  cold_start: float = 0.12,
+                  payload: int = 64 * 1024) -> Workflow:
+    """Srv: a latency-sensitive request pipeline (stage0 -> ... -> stageN).
+
+    The worst case for controlflow cold starts: every stage's container
+    boot sits on the critical path unless it was prewarmed when its
+    precursor launched (paper §3.2)."""
+    fns = []
+    prev = "request"
+    for i in range(stages):
+        out = f"s{i}"
+        fns.append(FunctionSpec(
+            f"stage{i}", inputs=(prev,), outputs=(out,),
+            fn=_digest_fn(out, exec_time, payload), exec_time=exec_time,
+            output_sizes={out: payload}, cold_start=cold_start))
+        prev = out
+    return Workflow("Srv", fns, {"request": 1024})
+
+
+def serving_fanout(workers: int = 4, *, exec_time: float = 0.03,
+                   cold_start: float = 0.12,
+                   payload: int = 32 * 1024) -> Workflow:
+    """SrvF: scatter/gather request shape (route -> worker.{i} -> merge)."""
+    fns = [FunctionSpec(
+        "route", inputs=("request",),
+        outputs=tuple(f"part.{i}" for i in range(workers)),
+        fn=_digest_multi(
+            [f"part.{i}" for i in range(workers)], exec_time, payload),
+        exec_time=exec_time,
+        output_sizes={f"part.{i}": payload for i in range(workers)},
+        cold_start=cold_start)]
+    for i in range(workers):
+        fns.append(FunctionSpec(
+            f"worker.{i}", inputs=(f"part.{i}",), outputs=(f"res.{i}",),
+            fn=_digest_fn(f"res.{i}", exec_time, payload),
+            exec_time=exec_time, output_sizes={f"res.{i}": payload},
+            cold_start=cold_start))
+    fns.append(FunctionSpec(
+        "merge", inputs=tuple(f"res.{i}" for i in range(workers)),
+        outputs=("response",),
+        fn=_digest_fn("response", exec_time, payload),
+        exec_time=exec_time, output_sizes={"response": payload},
+        cold_start=cold_start))
+    return Workflow("SrvF", fns, {"request": 1024})
+
+
+def _digest_multi(out_keys: list[str], exec_time: float, payload: int):
+    fns = {k: _digest_fn(k, 0.0, payload) for k in out_keys}
+    import time as _time
+
+    def fn(**kw):
+        if exec_time:
+            _time.sleep(exec_time)
+        out = {}
+        for k, f in fns.items():
+            out.update(f(**kw))
+        return out
+    return fn
+
+
 BENCHMARKS = {
     "WC": wordcount,
     "FP": file_processing,
@@ -237,6 +324,8 @@ BENCHMARKS = {
     "Soy": soykb,
     "WC-L": wordcount_large,
     "Gen-L": genome_large,
+    "Srv": serving_chain,
+    "SrvF": serving_fanout,
 }
 
 

@@ -7,6 +7,14 @@ Test modules import the shim via ``from conftest import given, settings, st``.
 
 import pytest
 
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running sweeps (the 200-seed differential run); "
+        'CI quick tier runs -m "not slow"')
+
+
 try:
     from hypothesis import given, settings
     from hypothesis import strategies as st
