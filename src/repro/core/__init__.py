@@ -15,12 +15,21 @@ Layers:
   every paper-figure experiment (CFlow/FaaSFlow/.../KNIX baselines).
 * :mod:`repro.core.workloads`    — paper benchmarks (WC/FP/Cyc/Epi/Gen/Soy).
 * :mod:`repro.core.experiments`  — open/closed-loop drivers + metrics.
+* :mod:`repro.core.lint`         — DCheck static workflow linter (stable
+  DF diagnostic codes; ``python -m repro.lint`` CLI).
+* :mod:`repro.core.check`        — DCheck dynamic invariant checker
+  (trace recording + offline happens-before/immutability validation).
 """
 
+from .check import (TraceChecker, TraceEvent, TraceRecorder, Violation,
+                    content_digest)
 from .dag import FunctionSpec, Workflow, parse_workflow
 from .dscheduler import (DFlowEngine, GlobalScheduler, InstanceRun,
                          dataflow_initial_frontier, dataflow_next_frontier)
-from .dstore import DStore, DataDirectoryService, LocalStore, Transport
+from .dstore import (DStore, DataDirectoryService, ImmutabilityError,
+                     LocalStore, Transport)
+from .lint import (Diagnostic, WorkflowLintError, check_workflow, lint,
+                   lint_workflow)
 from .experiments import (ExperimentResult, cold_start_latency,
                           percentile, run_closed_loop, run_open_loop)
 from .partition import cut_bytes, partition_workflow
@@ -33,6 +42,10 @@ from .workloads import BENCHMARKS, make_workflow
 
 __all__ = [
     "FunctionSpec", "Workflow", "parse_workflow",
+    "TraceChecker", "TraceEvent", "TraceRecorder", "Violation",
+    "content_digest", "ImmutabilityError",
+    "Diagnostic", "WorkflowLintError", "check_workflow", "lint",
+    "lint_workflow",
     "DFlowEngine", "GlobalScheduler", "InstanceRun",
     "dataflow_initial_frontier", "dataflow_next_frontier",
     "DStore", "DataDirectoryService", "LocalStore", "Transport",

@@ -103,6 +103,14 @@ class FunctionSpec:
                 f"{self.name}: stream_outputs {sorted(bad)} not in outputs")
         if self.chunk_size <= 0:
             raise ValueError(f"{self.name}: chunk_size must be positive")
+        # output_sizes naming a non-output key used to be silently ignored
+        # (size_of fell back to the 1 MB default) — a typo'd key made every
+        # simulator transfer-time estimate wrong with no signal.
+        bad = set(self.output_sizes) - set(self.outputs)
+        if bad:
+            raise ValueError(
+                f"{self.name}: output_sizes for non-output keys "
+                f"{sorted(bad)} (outputs: {sorted(self.outputs)})")
 
     def size_of(self, key: str) -> int:
         return int(self.output_sizes.get(key, 1 << 20))  # default 1 MB
@@ -130,6 +138,10 @@ class Workflow:
                 self.producer[k] = f.name
 
         # Keys consumed but never produced are workflow (external) inputs.
+        # The explicitly declared set is kept separately so the linter can
+        # flag typo'd input keys that silently default into externals.
+        self.declared_external: frozenset[str] = frozenset(
+            external_inputs or ())
         self.external_inputs: dict[str, int] = dict(external_inputs or {})
         for f in self.functions.values():
             for k in f.inputs:
@@ -249,6 +261,14 @@ def parse_workflow(doc: Mapping[str, Any] | str,
     expanded: list[tuple[str, dict]] = []
     for fname, spec in raw.items():
         expanded.extend(_expand_foreach(fname, spec))
+
+    seen: set[str] = set()
+    for fname, _ in expanded:
+        if fname in seen:
+            raise ValueError(
+                f"function {fname!r} declared twice: a foreach expansion "
+                f"collides with an explicitly declared function")
+        seen.add(fname)
 
     produced: set[str] = set()
     for _, spec in expanded:

@@ -419,7 +419,8 @@ class DFlowEngine:
                  transport: Transport | None = None,
                  get_timeout: float = 120.0,
                  straggler_factor: float | None = None,
-                 containers=None, prewarm: bool = True):
+                 containers=None, prewarm: bool = True,
+                 lint: bool = True):
         if pattern not in ("dataflow", "controlflow"):
             raise ValueError(pattern)
         self.nodes = [f"node{i}" for i in range(n_nodes)]
@@ -430,6 +431,7 @@ class DFlowEngine:
         self.straggler_factor = straggler_factor
         self.containers = containers
         self.prewarm = prewarm
+        self.lint = lint
 
     # ------------------------------------------------------------------
     def start(self, wf: Workflow, inputs: Mapping[str, Any] | None = None,
@@ -439,6 +441,14 @@ class DFlowEngine:
         """Launch one instance and return its handle (non-blocking) —
         the entry point serving layers use to run many instances
         concurrently over a shared ``store``."""
+        if self.lint:
+            # Pre-flight gate (DCheck): an error-severity diagnostic —
+            # e.g. an unbound fn that produces outputs — would otherwise
+            # surface mid-run as a GetTimeout on some downstream input,
+            # minutes away from its actual cause.
+            from .lint import check_workflow
+
+            check_workflow(wf, require_fns=True)
         return InstanceRun(self, wf, inputs, store=store, instance=instance,
                            placement=placement,
                            inject_failure=inject_failure).start()

@@ -29,14 +29,25 @@ from dataclasses import dataclass, field
 from typing import Any, Callable
 
 __all__ = ["DataDirectoryService", "LocalStore", "DStore", "Transport",
-           "GetTimeout"]
+           "GetTimeout", "ImmutabilityError"]
 
 
 class GetTimeout(TimeoutError):
     """Raised when Get blocks longer than the configured timeout."""
 
 
+class ImmutabilityError(ValueError):
+    """A key was co-written with divergent content.
+
+    First-writer-wins duplicate safety (§3.3) presumes deterministic
+    functions: a straggler re-execution must produce the *same bytes* as
+    the original, otherwise which copy a consumer sees depends on replica
+    choice.  The directory records a content digest at first publish and
+    rejects any later publish whose digest disagrees."""
+
+
 # stream.py lazily imports GetTimeout, so this import must come after it.
+from .check import TraceRecorder, content_digest  # noqa: E402
 from .stream import (DEFAULT_CHUNK, StreamDirectory, StreamReader,  # noqa: E402
                      StreamWriter, chunk_key)
 
@@ -68,6 +79,8 @@ class _Meta:
     key: str
     size: int
     locations: dict[str, int] = field(default_factory=dict)
+    digest: str | None = None     # content digest of first publish (None =
+    #                               opaque value, equality unverifiable)
 
 
 class DataDirectoryService:
@@ -78,11 +91,20 @@ class DataDirectoryService:
         self._cv = threading.Condition(self._lock)
         self._meta: dict[str, _Meta] = {}
 
-    def publish(self, key: str, size: int, node: str) -> None:
+    def publish(self, key: str, size: int, node: str,
+                digest: str | None = None) -> None:
         with self._cv:
             m = self._meta.get(key)
             if m is None:
-                m = self._meta[key] = _Meta(key, size)
+                m = self._meta[key] = _Meta(key, size, digest=digest)
+            elif digest is not None:
+                if m.digest is None:
+                    m.digest = digest       # first verifiable publish wins
+                elif m.digest != digest:
+                    raise ImmutabilityError(
+                        f"key {key!r} co-written with divergent content "
+                        f"(existing digest {m.digest[:12]}…, new "
+                        f"{digest[:12]}…): DStore data is immutable")
             m.locations.setdefault(node, 0)
             self._cv.notify_all()          # wake blocked Gets (§3.3.2)
 
@@ -223,18 +245,48 @@ class DStore:
         # with a failure (write → store wiped → publish) would register a
         # replica whose bytes are gone, invisible to recovery.
         self._write_lock = threading.Lock()
+        # DCheck hook (see check.py): None = recording off, zero cost.
+        self._tracer: TraceRecorder | None = None
+
+    def attach_tracer(self, tracer: TraceRecorder | None) -> None:
+        """Attach (or detach, with None) a :class:`TraceRecorder`.  Every
+        data-plane action is recorded from then on; stream-level events
+        (close/abort) are recorded by the shared StreamDirectory."""
+        self._tracer = tracer
+        self.streams.tracer = tracer
 
     # -- Table 1 core API ------------------------------------------------
     def put(self, node: str, key: str, value: Any) -> None:
-        """Create data with the given key (immutable; §3.3)."""
+        """Create data with the given key (immutable; §3.3).
+
+        Duplicate (straggler) co-writes are safe only because functions are
+        deterministic — the directory verifies it: a co-write whose content
+        digest diverges from the first publish raises
+        :class:`ImmutabilityError` instead of silently registering a second
+        replica with different bytes.
+        """
         store = self.stores[node]
+        digest = content_digest(value)
+        tracer = self._tracer
         with self._write_lock:
-            if self.directory.peek(key) is not None and store.has(key):
-                return                  # duplicate write: first-writer-wins
+            meta = self.directory.peek(key)
+            if meta is not None:
+                if (digest is not None and meta.digest is not None
+                        and meta.digest != digest):
+                    raise ImmutabilityError(
+                        f"put({key!r}) from {node!r} diverges from the "
+                        f"first writer's content: DStore data is immutable")
+                if store.has(key):
+                    return              # duplicate write: first-writer-wins
+            # Recorded before the bytes land so the trace's availability
+            # event precedes any Get that could observe them.
+            if tracer is not None:
+                tracer.record("put", key, node, size=_sizeof(value),
+                              digest=digest)
             store.write(key, value)
             # Metadata publish is what wakes consumers; in the real system it
             # is asynchronous w.r.t. the producer container, here just cheap.
-            self.directory.publish(key, _sizeof(value), node)
+            self.directory.publish(key, _sizeof(value), node, digest=digest)
         self.streams.notify_plain(key)   # wake get_stream fallbacks
 
     def get(self, node: str, key: str,
@@ -245,6 +297,21 @@ class DStore:
         directory record points at a wiped store) is dropped and the wait
         restarts — recovery re-publishes the key and wakes us again.
         """
+        tracer = self._tracer
+        if tracer is None:
+            return self._get(node, key, timeout)
+        tracer.record("get_block", key, node)
+        try:
+            value = self._get(node, key, timeout)
+        except BaseException:
+            tracer.record("get_fail", key, node)
+            raise
+        tracer.record("get_return", key, node,
+                      digest=content_digest(value))
+        return value
+
+    def _get(self, node: str, key: str,
+             timeout: float | None = None) -> Any:
         store = self.stores[node]
         deadline = None if timeout is None else time.monotonic() + timeout
         while True:
@@ -274,8 +341,12 @@ class DStore:
             # the lock a failure of `node` here would leave a phantom
             # replica that masks the data loss from recovery.
             with self._write_lock:
+                if self._tracer is not None:
+                    self._tracer.record("replica", key, node,
+                                        size=meta.size, digest=meta.digest)
                 store.write(key, value)
-                self.directory.publish(key, meta.size, node)  # new replica
+                self.directory.publish(key, meta.size, node,  # new replica
+                                       digest=meta.digest)
             return value
 
     # -- DStream chunked API (beyond-paper; see stream.py) -----------------
@@ -298,9 +369,15 @@ class DStore:
         of its own (so remote pulls are chunk-granular and receiver-driven),
         and a stream-directory publish that wakes blocked readers."""
         ck = chunk_key(key, idx)
+        digest = content_digest(chunk)
         with self._write_lock:
+            if self._tracer is not None:
+                self._tracer.record("put_chunk", key, node, idx=idx,
+                                    size=len(chunk), digest=digest)
+                self._tracer.record("put", ck, node, size=len(chunk),
+                                    digest=digest)
             self.stores[node].write(ck, chunk)
-            self.directory.publish(ck, len(chunk), node)
+            self.directory.publish(ck, len(chunk), node, digest=digest)
         self.streams.publish_chunk(key, idx, len(chunk))
 
     def evict_instance(self, prefix: str) -> None:
@@ -310,6 +387,12 @@ class DStore:
         instance prefix, so they are swept by the same pass).  Bounded
         memory under sustained multi-instance serving."""
         with self._write_lock:
+            if self._tracer is not None:
+                # Recorded before the bytes are reclaimed: an in-flight
+                # reader recorded earlier is a real use-after-evict hazard.
+                for k in self.directory.keys():
+                    if k.startswith(prefix):
+                        self._tracer.record("evict", k)
             for store in self.stores.values():
                 store.drop_prefix(prefix)
             self.directory.drop_prefix(prefix)
@@ -322,5 +405,11 @@ class DStore:
         # streams are evicted so a recovery rerun can re-claim them.
         self.streams.fail_owner(node)
         with self._write_lock:
+            if self._tracer is not None:
+                self._tracer.record("fail_node", node=node)
             self.stores[node].drop_all()
-            return self.directory.drop_node(node)
+            lost = self.directory.drop_node(node)
+            if self._tracer is not None:
+                for k in lost:
+                    self._tracer.record("drop", k, node)
+            return lost

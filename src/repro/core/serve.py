@@ -421,10 +421,17 @@ class DServe:
                  prewarm: bool | None = None, keepalive: float = 600.0,
                  max_per_node: int = 8, cold_start: float | None = None,
                  transport=None, get_timeout: float = 30.0,
-                 evict_on_complete: bool = True):
+                 evict_on_complete: bool = True, tracer=None,
+                 lint: bool = True):
         from .dscheduler import DFlowEngine
         from .dstore import DStore
 
+        if lint:
+            # Lint once at serve-construction time (the request path
+            # builds InstanceRuns directly and must stay lean).
+            from .lint import check_workflow
+
+            check_workflow(wf, require_fns=True)
         self.wf = wf
         self.pattern = pattern
         if prewarm is None:
@@ -438,6 +445,8 @@ class DServe:
                                   containers=self.containers,
                                   prewarm=prewarm)
         self.store = DStore(self.engine.nodes, self.engine.transport)
+        if tracer is not None:
+            self.store.attach_tracer(tracer)
         self.placement = self.engine.gs.assign(wf)
         self.evict_on_complete = evict_on_complete
         self._lock = threading.Lock()

@@ -88,6 +88,10 @@ class StreamDirectory:
         self._cv = threading.Condition(self._lock)
         self._streams: dict[str, _StreamMeta] = {}
         self._plain: set[str] = set()         # keys Put monolithically
+        # DCheck hook (see check.py): set via DStore.attach_tracer.  Chunk
+        # publishes are recorded by DStore.put_chunk; the directory records
+        # the stream-lifecycle events (close/abort) it alone decides.
+        self.tracer = None
 
     # -- producer ----------------------------------------------------------
     def claim(self, key: str, node: str) -> None:
@@ -113,6 +117,10 @@ class StreamDirectory:
     def close(self, key: str, total: int) -> None:
         """Seal the stream at ``total`` chunks (first closer wins)."""
         with self._cv:
+            if self.tracer is not None:
+                # Every close attempt is recorded (not just the winning
+                # one) so divergent co-closer totals are checkable.
+                self.tracer.record("stream_close", key, size=total)
             m = self._streams[key]
             if m.total is None:
                 m.total = total
@@ -132,6 +140,8 @@ class StreamDirectory:
                     self._cv.notify_all()
                     return
             m.aborted = True
+            if self.tracer is not None:
+                self.tracer.record("stream_abort", key, node or "")
             self._cv.notify_all()
 
     def notify_plain(self, key: str) -> None:
@@ -165,6 +175,8 @@ class StreamDirectory:
                     continue            # a co-writer is still alive
                 if m.total is None:
                     m.aborted = True
+                    if self.tracer is not None:
+                        self.tracer.record("stream_abort", k, node)
                 else:
                     del self._streams[k]
             self._cv.notify_all()

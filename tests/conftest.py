@@ -3,7 +3,18 @@
 ``hypothesis`` is an optional dev dependency (requirements-dev.txt): when it
 is missing, property-based tests skip while the rest of their modules run.
 Test modules import the shim via ``from conftest import given, settings, st``.
+
+DCheck trace validation (opt-in): ``DFLOW_TRACE_CHECK=1`` attaches a
+:class:`repro.core.check.TraceRecorder` to every DStore a test constructs
+and replays the trace through :class:`TraceChecker` at teardown — any
+happens-before / immutability / eviction / chunk-sequence violation fails
+the test.  ``DFLOW_TRACE_STRESS=<seed>`` additionally injects seeded
+random sleeps at every instrumentation point so thread interleavings are
+actually explored.  Tests that *deliberately* violate invariants opt out
+with ``@pytest.mark.notracecheck``.
 """
+
+import os
 
 import pytest
 
@@ -13,6 +24,37 @@ def pytest_configure(config):
         "markers",
         "slow: long-running sweeps (the 200-seed differential run); "
         'CI quick tier runs -m "not slow"')
+    config.addinivalue_line(
+        "markers",
+        "notracecheck: skip DFLOW_TRACE_CHECK validation (test seeds "
+        "deliberate invariant violations)")
+
+
+if os.environ.get("DFLOW_TRACE_CHECK") == "1":
+    @pytest.fixture(autouse=True)
+    def _dflow_trace_check(request, monkeypatch):
+        if request.node.get_closest_marker("notracecheck"):
+            yield
+            return
+        from repro.core.check import TraceChecker, TraceRecorder
+        from repro.core.dstore import DStore
+
+        stress_env = os.environ.get("DFLOW_TRACE_STRESS")
+        stress = int(stress_env) if stress_env else None
+        recorders: list[TraceRecorder] = []
+        orig_init = DStore.__init__
+
+        def init(self, *args, **kwargs):
+            orig_init(self, *args, **kwargs)
+            rec = TraceRecorder(stress=stress)
+            recorders.append(rec)
+            self.attach_tracer(rec)
+
+        monkeypatch.setattr(DStore, "__init__", init)
+        yield
+        checker = TraceChecker()
+        for rec in recorders:
+            checker.check_or_raise(rec.events())
 
 
 try:

@@ -108,11 +108,13 @@ def random_workflow(seed: int, *, max_functions: int = 8,
     produced: list[str] = []                 # keys available to later fns
     specs: list[FunctionSpec] = []
     for i in range(n):
-        # Draw 0-3 inputs from earlier outputs; early fns may instead take
-        # the external "x" (keys never produced are external by contract).
+        # Draw 0-3 inputs from earlier outputs; fns that drew none take
+        # the external "x" (keys never produced are external by contract),
+        # so every function has a data edge — generated DAGs lint clean
+        # (no error/warning diagnostics; see lint_clean below).
         k = rng.randint(0, min(3, len(produced)))
         inputs = tuple(sorted(rng.sample(produced, k)))
-        if not inputs and (i == 0 or rng.chance(0.6)):
+        if not inputs:
             inputs = ("x",)
         n_out = 2 if rng.chance(0.25) else 1
         outputs = tuple(f"o{i}" if j == 0 else f"o{i}.{j}"
@@ -132,6 +134,17 @@ def random_workflow(seed: int, *, max_functions: int = 8,
             output_sizes={o: 1280 for o in outputs}))
         produced.extend(outputs)
     return Workflow(f"fuzz{seed}", specs)
+
+
+def lint_clean(wf: Workflow) -> list:
+    """Generator contract: a random workflow may carry *info*-level
+    diagnostics (unconsumed by-products and stream fallbacks arise from
+    random shapes and are by-design byte-exact) but never a warning or
+    error.  Returns the offending diagnostics (empty = clean)."""
+    from repro.core.lint import lint_workflow
+
+    return [d for d in lint_workflow(wf, require_fns=True)
+            if d.severity in ("warning", "error")]
 
 
 def oracle_run(wf: Workflow, inputs: dict) -> dict:

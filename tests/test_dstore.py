@@ -5,7 +5,8 @@ import time
 
 import pytest
 
-from repro.core.dstore import DStore, GetTimeout, Transport
+from repro.core.dstore import (DStore, GetTimeout, ImmutabilityError,
+                               Transport)
 
 
 def test_put_get_local():
@@ -63,8 +64,33 @@ def test_replica_least_access_frequency():
 def test_immutability_first_writer_wins():
     ds = DStore(["n0"])
     ds.put("n0", "k", "first")
-    ds.put("n0", "k", "second")               # duplicate: ignored
+    ds.put("n0", "k", "first")                # identical co-write: no-op
     assert ds.get("n0", "k") == "first"
+
+
+def test_immutability_divergent_cowrite_rejected():
+    # A straggler re-execution must produce the same bytes; anything else
+    # breaks the determinism premise first-writer-wins rests on — from
+    # any node, same or different.
+    ds = DStore(["n0", "n1"])
+    ds.put("n0", "k", "first")
+    with pytest.raises(ImmutabilityError):
+        ds.put("n0", "k", "second")
+    with pytest.raises(ImmutabilityError):
+        ds.put("n1", "k", "second")
+    assert ds.get("n1", "k") == "first"
+
+
+def test_immutability_opaque_cowrite_tolerated():
+    # Values with no reliable byte representation can't be compared;
+    # the check stays conservative (first-writer-wins, no rejection).
+    class Opaque:
+        pass
+
+    ds = DStore(["n0"])
+    ds.put("n0", "k", Opaque())
+    ds.put("n0", "k", Opaque())
+    ds.get("n0", "k")
 
 
 def test_fail_node_drops_replicas():

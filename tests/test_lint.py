@@ -1,0 +1,429 @@
+"""DCheck static linter: per-diagnostic mutation tests + CLI.
+
+Strategy: start from a known-clean workflow, inject exactly one defect
+class, and assert the exact DF code fires — so every diagnostic is pinned
+to the defect it exists for, and a refactor that silently stops detecting
+one fails its dedicated test.
+"""
+
+import json
+
+import pytest
+
+from repro.core.dag import FunctionSpec, Workflow
+from repro.core.lint import (CODES, WorkflowLintError, check_workflow, lint,
+                             lint_workflow, max_severity)
+from repro.core.workloads import BENCHMARKS
+from repro.lint import main as lint_main
+
+
+def _fn(**kw):
+    return {}
+
+
+def _spec(name, inputs=(), outputs=(), **kw):
+    kw.setdefault("fn", _fn)
+    return FunctionSpec(name, inputs=tuple(inputs), outputs=tuple(outputs),
+                        **kw)
+
+
+def clean_wf():
+    return Workflow("t", [
+        _spec("a", inputs=("x",), outputs=("k1",)),
+        _spec("b", inputs=("k1",), outputs=("r",)),
+    ])
+
+
+def codes_of(diags):
+    return {d.code for d in diags}
+
+
+# ----------------------------------------------------------------------
+# Baseline: the clean workflow and every built-in workload are clean.
+# ----------------------------------------------------------------------
+
+def test_clean_workflow_lints_clean():
+    assert lint_workflow(clean_wf(), require_fns=True) == []
+
+
+@pytest.mark.parametrize("name", sorted(BENCHMARKS))
+def test_builtin_workloads_lint_clean(name):
+    assert lint_workflow(BENCHMARKS[name]()) == []
+
+
+# ----------------------------------------------------------------------
+# Workflow-level mutations, one code each.
+# ----------------------------------------------------------------------
+
+def test_df001_by_product_output():
+    wf = Workflow("t", [
+        _spec("a", inputs=("x",), outputs=("k1", "junk")),
+        _spec("b", inputs=("k1",), outputs=("r",)),
+    ])
+    diags = lint_workflow(wf)
+    assert codes_of(diags) == {"DF001"}
+    (d,) = diags
+    assert d.key == "junk" and d.severity == "info"
+
+
+def test_df001_not_raised_for_exit_outputs():
+    # Exit-function outputs are the workflow's results, not by-products.
+    assert lint_workflow(clean_wf()) == []
+
+
+def test_df002_disconnected_function():
+    wf = Workflow("t", [
+        _spec("a", inputs=("x",), outputs=("k1",)),
+        _spec("b", inputs=("k1",), outputs=("r",)),
+        _spec("island", inputs=(), outputs=("z",)),
+    ])
+    assert "DF002" in codes_of(lint_workflow(wf))
+
+
+def test_df003_self_consumed_key():
+    wf = Workflow("t", [
+        _spec("a", inputs=("x",), outputs=("k1",)),
+        _spec("b", inputs=("k1", "r"), outputs=("r",)),
+    ])
+    diags = [d for d in lint_workflow(wf) if d.code == "DF003"]
+    assert diags and diags[0].key == "r" and diags[0].severity == "error"
+
+
+def test_df004_stream_output_consumed_monolithically():
+    wf = Workflow("t", [
+        _spec("a", inputs=("x",), outputs=("k1",), stream_outputs=("k1",)),
+        _spec("b", inputs=("k1",), outputs=("r",)),
+    ])
+    diags = [d for d in lint_workflow(wf) if d.code == "DF004"]
+    assert diags and diags[0].severity == "info"
+
+
+def test_df005_stream_input_from_monolithic_producer():
+    wf = Workflow("t", [
+        _spec("a", inputs=("x",), outputs=("k1",)),
+        _spec("b", inputs=("k1",), outputs=("r",), stream_inputs=("k1",)),
+    ])
+    assert "DF005" in codes_of(lint_workflow(wf))
+
+
+def test_df006_chunk_size_mismatch():
+    wf = Workflow("t", [
+        _spec("a", inputs=("x",), outputs=("k1",), stream_outputs=("k1",),
+              chunk_size=512),
+        _spec("b", inputs=("k1",), outputs=("r",), stream_inputs=("k1",),
+              chunk_size=1024),
+    ])
+    diags = [d for d in lint_workflow(wf) if d.code == "DF006"]
+    assert diags and diags[0].severity == "warning"
+
+
+def test_df006_silent_when_sizes_agree():
+    wf = Workflow("t", [
+        _spec("a", inputs=("x",), outputs=("k1",), stream_outputs=("k1",),
+              chunk_size=512),
+        _spec("b", inputs=("k1",), outputs=("r",), stream_inputs=("k1",),
+              chunk_size=512),
+    ])
+    assert "DF006" not in codes_of(lint_workflow(wf))
+
+
+def test_df008_reserved_separator_in_key():
+    wf = Workflow("t", [
+        _spec("a", inputs=("x",), outputs=("k:1",)),
+        _spec("b", inputs=("k:1",), outputs=("r#2",)),
+    ])
+    diags = [d for d in lint_workflow(wf) if d.code == "DF008"]
+    assert {d.key for d in diags} == {"k:1", "r#2"}
+    assert all(d.severity == "error" for d in diags)
+
+
+def test_df010_missing_fn_binding_for_engine_run():
+    wf = Workflow("t", [
+        _spec("a", inputs=("x",), outputs=("k1",)),
+        FunctionSpec("b", inputs=("k1",), outputs=("r",)),   # fn=None
+    ])
+    diags = [d for d in lint_workflow(wf, require_fns=True)
+             if d.code == "DF010"]
+    assert diags and diags[0].severity == "error"
+    # Without an engine-run request, a mixed workflow is only a warning.
+    diags = [d for d in lint_workflow(wf) if d.code == "DF010"]
+    assert diags and diags[0].severity == "warning"
+    # Fully unbound (simulator-style) workflows are fine.
+    sim = Workflow("t", [
+        FunctionSpec("a", inputs=("x",), outputs=("k1",)),
+        FunctionSpec("b", inputs=("k1",), outputs=("r",)),
+    ])
+    assert lint_workflow(sim) == []
+
+
+def test_df014_undeclared_external_input():
+    wf = Workflow("t", [
+        _spec("a", inputs=("x", "corpsu"), outputs=("k1",)),   # typo'd key
+        _spec("b", inputs=("k1",), outputs=("r",)),
+    ], external_inputs={"x": 64, "corpus": 64})
+    diags = [d for d in lint_workflow(wf) if d.code == "DF014"]
+    assert diags and diags[0].key == "corpsu"
+
+
+def test_df014_silent_without_declared_externals():
+    # No declared set to check against: inferred externals are the normal
+    # contract (keys never produced are workflow inputs).
+    assert "DF014" not in codes_of(lint_workflow(clean_wf()))
+
+
+def test_df015_invalid_resources():
+    wf = Workflow("t", [
+        _spec("a", inputs=("x",), outputs=("k1",), exec_time=-0.5),
+        _spec("b", inputs=("k1",), outputs=("r",), cpu=0.0),
+    ])
+    diags = [d for d in lint_workflow(wf) if d.code == "DF015"]
+    assert {d.function for d in diags} == {"a", "b"}
+
+
+# ----------------------------------------------------------------------
+# Doc-level mutations (defects construction would reject still get codes).
+# ----------------------------------------------------------------------
+
+def _doc(functions, **extra):
+    return {"name": "t", "functions": functions, **extra}
+
+
+def test_df000_unparseable_yaml():
+    assert codes_of(lint("{:::")) == {"DF000"}
+    assert codes_of(lint({"no_functions": True})) == {"DF000"}
+
+
+def test_df007_output_sizes_unknown_key():
+    doc = _doc({
+        "a": {"inputs": ["x"], "outputs": ["k1"],
+              "output_sizes": {"k2": "8MB"}},
+        "b": {"inputs": ["k1"], "outputs": ["r"]},
+    })
+    diags = lint(doc)
+    assert "DF007" in codes_of(diags)
+    # Construction would raise (FunctionSpec validates now); the linter
+    # still reports the precise code, not a bare DF000 traceback.
+    assert "DF000" not in codes_of(diags)
+
+
+def test_df009_glob_matches_nothing():
+    doc = _doc({
+        "a": {"inputs": ["x"], "outputs": ["k1"]},
+        "b": {"inputs": ["wc.*"], "outputs": ["r"]},
+    })
+    diags = [d for d in lint(doc) if d.code == "DF009"]
+    assert diags and diags[0].severity == "error"
+
+
+def test_df009_glob_over_matches_families():
+    doc = _doc({
+        "a": {"inputs": ["x"], "outputs": ["out.1"]},
+        "b": {"inputs": ["x"], "outputs": ["out.2"]},
+        "c": {"inputs": ["out.*"], "outputs": ["r"]},
+    })
+    diags = [d for d in lint(doc) if d.code == "DF009"]
+    assert diags and diags[0].severity == "warning"
+
+
+def test_df011_duplicate_producer():
+    doc = _doc({
+        "a": {"inputs": ["x"], "outputs": ["k1"]},
+        "b": {"inputs": ["x"], "outputs": ["k1"]},
+    })
+    diags = [d for d in lint(doc) if d.code == "DF011"]
+    assert diags and diags[0].key == "k1"
+
+
+def test_df012_foreach_collision():
+    doc = _doc({
+        "count": {"foreach": 2, "inputs": ["x"], "outputs": ["wc.$i"]},
+        "count.1": {"inputs": ["x"], "outputs": ["other"]},
+    })
+    assert "DF012" in codes_of(lint(doc))
+
+
+def test_df013_cycle():
+    doc = _doc({
+        "a": {"inputs": ["k2"], "outputs": ["k1"]},
+        "b": {"inputs": ["k1"], "outputs": ["k2"]},
+    })
+    diags = [d for d in lint(doc) if d.code == "DF013"]
+    assert diags and diags[0].severity == "error"
+
+
+def test_clean_doc_lints_clean():
+    doc = _doc({
+        "split": {"inputs": ["corpus"],
+                  "outputs": ["shard.0", "shard.1"],
+                  "output_sizes": {"shard.0": "1KB", "shard.1": "1KB"}},
+        "count": {"foreach": 2, "inputs": ["shard.$i"],
+                  "outputs": ["wc.$i"]},
+        "merge": {"inputs": ["wc.*"], "outputs": ["result"]},
+    }, external_inputs={"corpus": "2KB"})
+    assert lint(doc) == []
+
+
+def test_registry_exercises_ten_plus_codes():
+    """Acceptance floor: the linter detects >= 10 distinct codes (every
+    registry entry has a dedicated mutation test above; this is the
+    aggregate guard)."""
+    fired = set()
+    fired |= codes_of(lint("{:::"))
+    fired |= codes_of(lint_workflow(Workflow("t", [
+        _spec("a", inputs=("x",), outputs=("k1", "junk", "s:d")),
+        _spec("island"),
+        _spec("b", inputs=("k1", "r"), outputs=("r",), exec_time=-1.0,
+              stream_inputs=("k1",)),
+        FunctionSpec("c", inputs=("k1",), outputs=("q",)),
+    ]), require_fns=True))
+    fired |= codes_of(lint(_doc({
+        "a": {"inputs": ["x"], "outputs": ["k1"],
+              "output_sizes": {"nope": 1}},
+        "b": {"inputs": ["x"], "outputs": ["k1"]},
+        "count": {"foreach": 2, "inputs": ["zz.*"], "outputs": ["wc.$i"]},
+        "count.1": {"inputs": ["x"], "outputs": ["o"]},
+    })))
+    fired |= codes_of(lint(_doc({
+        "a": {"inputs": ["k2"], "outputs": ["k1"]},
+        "b": {"inputs": ["k1"], "outputs": ["k2"]},
+    })))
+    assert len(fired) >= 10, sorted(fired)
+    assert fired <= set(CODES)
+
+
+# ----------------------------------------------------------------------
+# check_workflow: the engine/serve pre-flight gate.
+# ----------------------------------------------------------------------
+
+def test_check_workflow_raises_on_errors():
+    wf = Workflow("t", [
+        _spec("a", inputs=("x",), outputs=("k1",)),
+        _spec("b", inputs=("k1", "r"), outputs=("r",)),
+    ])
+    with pytest.raises(WorkflowLintError) as ei:
+        check_workflow(wf)
+    assert any(d.code == "DF003" for d in ei.value.diagnostics)
+    check_workflow(clean_wf(), require_fns=True)     # clean: no raise
+
+
+def test_engine_preflight_rejects_unbound_run():
+    from repro.core.dscheduler import DFlowEngine
+
+    wf = Workflow("t", [
+        FunctionSpec("a", inputs=("x",), outputs=("k1",)),
+    ])
+    with pytest.raises(WorkflowLintError):
+        DFlowEngine(n_nodes=1).run(wf, {"x": b"v"})
+    # Opt-out for callers that manage binding themselves.
+    eng = DFlowEngine(n_nodes=1, lint=False)
+    assert eng.lint is False
+
+
+def test_serve_preflight_rejects_bad_workflow():
+    from repro.core.serve import DServe
+
+    wf = Workflow("t", [
+        _spec("a", inputs=("x",), outputs=("k:bad",)),
+    ])
+    with pytest.raises(WorkflowLintError):
+        DServe(wf, n_nodes=1)
+
+
+def test_max_severity():
+    assert max_severity([]) is None
+    assert max_severity(lint("{:::")) == "error"
+
+
+# ----------------------------------------------------------------------
+# Fuzz contract: every generated random DAG lints clean.
+# ----------------------------------------------------------------------
+
+def test_random_workflows_lint_clean():
+    from strategies import lint_clean, random_workflow
+
+    for seed in range(200):
+        bad = lint_clean(random_workflow(seed))
+        assert not bad, (seed, [d.format() for d in bad])
+
+
+# ----------------------------------------------------------------------
+# CLI (python -m repro.lint)
+# ----------------------------------------------------------------------
+
+CLEAN_YAML = """
+name: wc
+functions:
+  split:
+    inputs: [corpus]
+    outputs: [shard.0, shard.1]
+  count:
+    foreach: 2
+    inputs: [shard.$i]
+    outputs: [wc.$i]
+  merge:
+    inputs: [wc.*]
+    outputs: [result]
+external_inputs:
+  corpus: 2KB
+"""
+
+BROKEN_YAML = """
+name: broken
+functions:
+  a:
+    inputs: [x, r]
+    outputs: [r]
+"""
+
+
+def test_cli_clean_file(tmp_path, capsys):
+    p = tmp_path / "wc.yaml"
+    p.write_text(CLEAN_YAML)
+    assert lint_main([str(p)]) == 0
+    assert "clean" in capsys.readouterr().out
+
+
+def test_cli_broken_file_fails(tmp_path, capsys):
+    p = tmp_path / "broken.yaml"
+    p.write_text(BROKEN_YAML)
+    assert lint_main([str(p)]) == 1
+    assert "DF003" in capsys.readouterr().out
+
+
+def test_cli_builtins_all_clean(capsys):
+    assert lint_main(["--builtin", "all"]) == 0
+    out = capsys.readouterr().out
+    assert "builtin:WC" in out and "0 failed" in out
+
+
+def test_cli_strict_fails_on_warning(tmp_path):
+    p = tmp_path / "warn.yaml"
+    # Mixed bound/unbound can't happen via YAML; use a partial external
+    # declaration (DF014 warning) instead.
+    p.write_text("""
+name: warn
+functions:
+  a:
+    inputs: [x, y]
+    outputs: [r]
+external_inputs:
+  x: 1KB
+""")
+    assert lint_main([str(p)]) == 0
+    assert lint_main([str(p), "--strict"]) == 1
+
+
+def test_cli_json_format(tmp_path, capsys):
+    p = tmp_path / "broken.yaml"
+    p.write_text(BROKEN_YAML)
+    assert lint_main([str(p), "--format", "json"]) == 1
+    doc = json.loads(capsys.readouterr().out)
+    assert doc[0]["target"] == str(p)
+    assert any(d["code"] == "DF003" for d in doc[0]["diagnostics"])
+
+
+def test_cli_list_codes(capsys):
+    assert lint_main(["--list-codes"]) == 0
+    out = capsys.readouterr().out
+    for code in CODES:
+        assert code in out
