@@ -21,28 +21,46 @@ FULL = dict(rates=(2.0, 6.0, 12.0), n=16, stages=4, exec_time=0.03,
             cold_start=0.15)
 
 
-def sweep(rates, n, stages, exec_time, cold_start):
-    """Returns (rows, reports) — reports[(rate, pattern)] = ServeReport."""
+def sweep(rates, n, stages, exec_time, cold_start,
+          patterns=("controlflow", "dataflow")):
+    """Returns (rows, reports) — reports[(rate, pattern)] = ServeReport.
+
+    Pattern ``"dataflow+plan"`` runs the dataflow engine under a static
+    :class:`~repro.core.plan.WorkflowPlan`: per-key eviction the moment
+    the statically-last read returns (instead of keep-alive until
+    instance completion) and slack-timed container prewarm (instead of
+    fire-at-precursor-launch).
+    """
     rows, reports = [], {}
     for rate in rates:
-        for pattern in ("controlflow", "dataflow"):
+        for pattern in patterns:
             wf = serving_chain(stages=stages, exec_time=exec_time,
                                cold_start=cold_start, payload=16 * 1024)
-            srv = DServe(wf, n_nodes=2, pattern=pattern, keepalive=10.0,
-                         max_per_node=16)
+            srv = DServe(wf, n_nodes=2,
+                         pattern=pattern.removesuffix("+plan"),
+                         keepalive=10.0, max_per_node=16,
+                         plan=pattern.endswith("+plan"))
             rep = srv.run(poisson_arrivals(rate, n, seed=7),
                           inputs={"request": b"req"})
             reports[(rate, pattern)] = rep
             rows.append((
                 f"serve/rps={rate:g}/{pattern}/p99", rep.p99 * 1e6,
                 f"p50={rep.p50:.3f}s cold={rep.cold_starts} "
-                f"conc={rep.max_concurrency} fail={rep.failures}"))
+                f"conc={rep.max_concurrency} fail={rep.failures} "
+                f"peak_resident={rep.peak_resident_bytes}"))
         df = reports[(rate, "dataflow")]
         cf = reports[(rate, "controlflow")]
         rows.append((
             f"serve/rps={rate:g}/p99_cf_over_df", 0.0,
             f"{cf.p99 / max(df.p99, 1e-9):.2f}x "
             f"(cold {cf.cold_starts} vs {df.cold_starts})"))
+        if (rate, "dataflow+plan") in reports:
+            dp = reports[(rate, "dataflow+plan")]
+            rows.append((
+                f"serve/rps={rate:g}/plan_peak_over_heuristic", 0.0,
+                f"{dp.peak_resident_bytes / max(df.peak_resident_bytes, 1):.2f}x "
+                f"({dp.peak_resident_bytes} vs {df.peak_resident_bytes} B, "
+                f"cold {dp.cold_starts} vs {df.cold_starts})"))
     return rows, reports
 
 
@@ -55,9 +73,14 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="single-rate run with acceptance assertions")
+    ap.add_argument("--plan", action="store_true",
+                    help="add the plan-driven dataflow arm (DPlan "
+                    "eviction + slack prewarm; asserted under --smoke)")
     args = ap.parse_args(argv)
     cfg = SMOKE if args.smoke else FULL
-    rows, reports = sweep(**cfg)
+    patterns = ("controlflow", "dataflow") + (
+        ("dataflow+plan",) if args.plan else ())
+    rows, reports = sweep(**cfg, patterns=patterns)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
@@ -75,6 +98,24 @@ def main(argv=None) -> int:
             f"{df.cold_starts} !< {cf.cold_starts}")
         print(f"# smoke ok: dataflow p99 {df.p99:.3f}s < controlflow "
               f"{cf.p99:.3f}s at concurrency {df.max_concurrency}")
+        if args.plan:
+            dp = reports[(rate, "dataflow+plan")]
+            assert dp.failures == 0, "plan-driven instances failed"
+            assert dp.peak_resident_bytes < df.peak_resident_bytes, (
+                f"plan eviction should bound resident bytes below the "
+                f"keep-alive baseline: {dp.peak_resident_bytes} !< "
+                f"{df.peak_resident_bytes}")
+            # "equal-or-better p99": strictly dp.p99 <= df.p99 modulo
+            # thread-scheduling jitter (both runs share one process).
+            assert dp.p99 <= df.p99 * 1.10, (
+                f"plan-driven p99 {dp.p99:.3f} regressed past heuristic "
+                f"{df.p99:.3f}")
+            assert dp.cold_starts <= df.cold_starts, (
+                f"slack prewarm paid more cold boots than the heuristic: "
+                f"{dp.cold_starts} !> {df.cold_starts}")
+            print(f"# plan smoke ok: peak resident "
+                  f"{dp.peak_resident_bytes} B < {df.peak_resident_bytes} "
+                  f"B at p99 {dp.p99:.3f}s (heuristic {df.p99:.3f}s)")
     return 0
 
 

@@ -47,7 +47,7 @@ from dataclasses import dataclass, field
 from typing import Any, Iterable
 
 __all__ = ["TraceEvent", "TraceRecorder", "Violation", "TraceChecker",
-           "content_digest"]
+           "PlanConformance", "content_digest"]
 
 
 def content_digest(value: Any) -> str | None:
@@ -341,3 +341,91 @@ class TraceChecker:
             raise AssertionError(
                 f"trace violates {len(violations)} dataflow "
                 f"invariant(s):\n  {lines}")
+
+
+# Container-lifecycle events (recorded by serve.ContainerService, key =
+# image) that change the count of unleased — bootable-into — containers.
+_CONTAINER_DELTA = {"prewarm_boot": 1, "container_release": 1,
+                    "warm_hit": -1, "prewarm_hit": -1, "container_evict": -1}
+
+
+class PlanConformance:
+    """Replay a recorded trace against a static :class:`~repro.core.plan.
+    WorkflowPlan` (duck-typed: anything with ``eviction_reads``) and flag
+    dynamic events that contradict a static claim.
+
+    * ``plan_eviction`` — a read (Get or replica pull) of a planned key
+      after its evict event, or more ``get_return``\\ s of a key than the
+      plan's statically-derived read count: either means the liveness
+      analysis under-counted consumers, so the "provably-safe" eviction
+      was not safe.  An evict *before* the count is reached is legal —
+      instance-scoped eviction mops up at completion.
+    * ``plan_prewarm`` — a cold boot paid while an unleased container of
+      the same (node, image) existed in the trace: the boot the prewarm
+      schedule issued was available, so the request path should not have
+      paid a cold start.
+
+    ``instances`` lists the key-namespace instances the plan was applied
+    to (``""`` = un-namespaced single run); container events are global.
+    """
+
+    def __init__(self, plan):
+        self.plan = plan
+
+    def check(self, events: Iterable[TraceEvent], *,
+              instances: Iterable[str] = ("",)) -> list[Violation]:
+        planned: dict[str, int] = {}
+        for inst in instances:
+            prefix = f"{inst}:" if inst else ""
+            for k, n in self.plan.eviction_reads.items():
+                planned[prefix + k] = n
+        out: list[Violation] = []
+        seen: dict[str, int] = {}
+        evicted: dict[str, TraceEvent] = {}
+        unleased: dict[tuple[str, str], int] = {}
+        for ev in sorted(events, key=lambda e: e.clock):
+            if ev.kind in ("get_block", "get_return", "replica"):
+                if ev.key not in planned:
+                    continue
+                first_evict = evicted.get(ev.key)
+                if first_evict is not None:
+                    out.append(Violation(
+                        "plan_eviction",
+                        f"key {ev.key!r} observed by {ev.kind} at clock "
+                        f"{ev.clock} after its planned eviction at clock "
+                        f"{first_evict.clock} — the liveness analysis "
+                        "missed a consumer", (first_evict, ev)))
+                if ev.kind == "get_return":
+                    seen[ev.key] = seen.get(ev.key, 0) + 1
+                    if seen[ev.key] > planned[ev.key]:
+                        out.append(Violation(
+                            "plan_eviction",
+                            f"key {ev.key!r} returned {seen[ev.key]} "
+                            f"Gets but the plan claims exactly "
+                            f"{planned[ev.key]} reads", (ev,)))
+            elif ev.kind == "evict":
+                if ev.key in planned:
+                    evicted.setdefault(ev.key, ev)
+            elif ev.kind == "cold_boot":
+                n = unleased.get((ev.node, ev.key), 0)
+                if n > 0:
+                    out.append(Violation(
+                        "plan_prewarm",
+                        f"cold boot of {ev.key!r} on {ev.node!r} at clock "
+                        f"{ev.clock} while {n} unleased container(s) "
+                        "existed — the prewarm schedule had hidden this "
+                        "boot and the request path paid it anyway", (ev,)))
+            elif ev.kind in _CONTAINER_DELTA:
+                kk = (ev.node, ev.key)
+                unleased[kk] = max(
+                    0, unleased.get(kk, 0) + _CONTAINER_DELTA[ev.kind])
+        return out
+
+    def check_or_raise(self, events: Iterable[TraceEvent], *,
+                       instances: Iterable[str] = ("",)) -> None:
+        violations = self.check(events, instances=instances)
+        if violations:
+            lines = "\n  ".join(str(v) for v in violations)
+            raise AssertionError(
+                f"trace contradicts the plan in {len(violations)} "
+                f"place(s):\n  {lines}")

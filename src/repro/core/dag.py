@@ -210,6 +210,19 @@ class Workflow:
     def total_exec_time(self) -> float:
         return sum(f.exec_time for f in self.functions.values())
 
+    def key_bytes(self, key: str) -> int:
+        """Declared size of ``key`` regardless of who produced it.
+
+        The one sizing authority shared by the partitioner's cut model
+        and the planner's transfer matrix, so the two can never disagree
+        (stream-declared keys included: chunking changes the transfer
+        granularity, not the byte count).
+        """
+        p = self.producer.get(key)
+        if p is not None:
+            return self.functions[p].size_of(key)
+        return self.external_inputs.get(key, 1 << 20)
+
     def with_functions(self, **overrides: FunctionSpec) -> "Workflow":
         fns = [overrides.get(n, f) for n, f in self.functions.items()]
         return Workflow(self.name, fns, self.external_inputs)

@@ -120,7 +120,8 @@ class InstanceRun:
                  inputs: Mapping[str, Any] | None, *,
                  store: DStore | None = None, instance: str | None = None,
                  placement: dict[str, str] | None = None,
-                 inject_failure: str | None = None):
+                 inject_failure: str | None = None,
+                 plan=None):
         self.engine = engine
         self.wf = wf
         self.inputs = dict(inputs or {})
@@ -130,6 +131,17 @@ class InstanceRun:
         self._ns = f"{instance}:" if instance else ""
         self.placement = dict(placement) if placement is not None \
             else engine.gs.assign(wf)
+        # DPlan (plan.py WorkflowPlan): static eviction read-counts are
+        # installed in the store and container boots follow the slack
+        # schedule instead of the fire-at-precursor-launch heuristic.
+        # Incompatible with duplicate execution (stragglers) and failure
+        # recovery: their extra Gets would drain read counts early and
+        # evict keys a re-execution still needs.
+        if plan is not None and (inject_failure or engine.straggler_factor):
+            raise ValueError("plan-driven eviction cannot be combined with "
+                             "straggler duplicates or failure injection")
+        self.plan = plan
+        self._prewarm_timers: list[threading.Timer] = []
         self.state = _InstanceState(wf)
         self.report = RunReport(outputs={}, wall_time=0.0)
         self._inject_failure = inject_failure
@@ -168,6 +180,9 @@ class InstanceRun:
             node = placement[consumers[0]] if consumers \
                 else self.engine.nodes[0]
             store.put(node, self.ns(k), v)
+        if self.plan is not None:
+            store.set_plan_reads(self._ns, self.plan.eviction_reads)
+            self._arm_prewarm()
         if self.engine.pattern == "dataflow":
             for fname in dataflow_initial_frontier(wf):
                 self._launch(fname)
@@ -176,11 +191,32 @@ class InstanceRun:
                 self._launch(fname)
         return self
 
+    def _arm_prewarm(self) -> None:
+        """Boot containers per the plan's slack schedule (§3.2 refined):
+        each function's container starts booting at ``est - cold_start``
+        so it turns warm exactly when the frontier can reach the function
+        — instead of the moment any precursor launches."""
+        engine = self.engine
+        if engine.containers is None or not engine.prewarm:
+            return
+        for fname, boot_at, cold in self.plan.prewarm_schedule:
+            node, image = self.placement[fname], self.image(fname)
+            if boot_at <= 0.0:
+                engine.containers.prewarm(node, image, cold)
+            else:
+                t = threading.Timer(boot_at, engine.containers.prewarm,
+                                    args=(node, image, cold))
+                t.daemon = True
+                t.start()
+                self._prewarm_timers.append(t)
+
     def wait(self, timeout: float | None = None) -> RunReport:
         """Block until the instance completes; returns the report."""
         state, wf = self.state, self.wf
         state.all_done.wait(timeout=timeout if timeout is not None
                             else self.engine.get_timeout * 2)
+        for t in self._prewarm_timers:
+            t.cancel()
         if state.failed:
             fname, exc = next(iter(state.failed.items()))
             raise RuntimeError(f"function {fname!r} failed") from exc
@@ -205,6 +241,8 @@ class InstanceRun:
     def evict(self) -> None:
         """Instance-scoped eviction: free every key this instance stored
         (bounded memory under sustained serving)."""
+        for t in self._prewarm_timers:
+            t.cancel()
         if self._ns:
             self.store.evict_instance(self._ns)
 
@@ -225,8 +263,10 @@ class InstanceRun:
         # booting now, overlapping with this function's own execution.
         # Strictly a dataflow-pattern mechanism: the controlflow baseline
         # (§5.5 ablation) must boot only when a function becomes ready.
+        # A static plan supersedes this heuristic (slack-timed boots are
+        # armed once at start()).
         if (engine.containers is not None and engine.prewarm
-                and engine.pattern == "dataflow"):
+                and engine.pattern == "dataflow" and self.plan is None):
             for s in wf.successors[fname]:
                 engine.containers.prewarm(
                     self.placement[s], self.image(s),
@@ -251,8 +291,9 @@ class InstanceRun:
         f = wf.functions[fname]
         containers = engine.containers
         leased = False
+        plan_mode = self.plan is not None
         try:
-            if containers is not None:
+            if containers is not None and not plan_mode:
                 # Container acquire happens at launch time — before the
                 # input fetches below block — so a cold boot overlaps the
                 # precursor's execution under the dataflow pattern.
@@ -269,6 +310,17 @@ class InstanceRun:
             for attempt in range(3):
                 try:
                     kwargs = self._fetch_inputs(node, f)
+                    if containers is not None and not leased:
+                        # Plan mode: acquire only once inputs are in hand,
+                        # so the container is not leased during the input
+                        # wait and the slack-timed prewarm (armed at
+                        # start()) has it booted by now.
+                        cold = containers.acquire(node, self.image(fname),
+                                                  f.cold_start)
+                        leased = True
+                        if cold:
+                            with state.lock:
+                                self.report.cold_starts += 1
                     if containers is not None:
                         with containers.slot(node):
                             result = f.fn(**kwargs) if f.fn else {}
@@ -437,7 +489,8 @@ class DFlowEngine:
     def start(self, wf: Workflow, inputs: Mapping[str, Any] | None = None,
               *, store: DStore | None = None, instance: str | None = None,
               placement: dict[str, str] | None = None,
-              inject_failure: str | None = None) -> InstanceRun:
+              inject_failure: str | None = None,
+              plan=None) -> InstanceRun:
         """Launch one instance and return its handle (non-blocking) —
         the entry point serving layers use to run many instances
         concurrently over a shared ``store``."""
@@ -451,13 +504,17 @@ class DFlowEngine:
             check_workflow(wf, require_fns=True)
         return InstanceRun(self, wf, inputs, store=store, instance=instance,
                            placement=placement,
-                           inject_failure=inject_failure).start()
+                           inject_failure=inject_failure, plan=plan).start()
 
     def run(self, wf: Workflow, inputs: Mapping[str, Any] | None = None,
-            *, inject_failure: str | None = None) -> RunReport:
+            *, inject_failure: str | None = None,
+            plan=None) -> RunReport:
         """Execute one workflow instance; returns exit-function outputs.
 
         ``inject_failure``: name of a node that "crashes" right after the
         first function on it completes — exercises incremental recovery.
+        ``plan``: a :class:`repro.core.plan.WorkflowPlan` switches the
+        instance to plan-driven eviction + slack-timed prewarm.
         """
-        return self.start(wf, inputs, inject_failure=inject_failure).wait()
+        return self.start(wf, inputs, inject_failure=inject_failure,
+                          plan=plan).wait()

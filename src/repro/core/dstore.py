@@ -26,7 +26,7 @@ from __future__ import annotations
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import Any, Callable, Mapping
 
 __all__ = ["DataDirectoryService", "LocalStore", "DStore", "Transport",
            "GetTimeout", "ImmutabilityError"]
@@ -183,16 +183,21 @@ class DataDirectoryService:
 
 
 class LocalStore:
-    """Per-node in-memory object store."""
+    """Per-node in-memory object store (byte-accounted: the DPlan peak-
+    resident metric and eviction benchmarks read ``resident_bytes``)."""
 
     def __init__(self, node: str):
         self.node = node
         self._lock = threading.Lock()
         self._data: dict[str, Any] = {}
+        self._bytes = 0
 
     def write(self, key: str, value: Any) -> None:
         with self._lock:
+            if key in self._data:
+                self._bytes -= _sizeof(self._data[key])
             self._data[key] = value
+            self._bytes += _sizeof(value)
 
     def read(self, key: str) -> Any:
         with self._lock:
@@ -205,11 +210,22 @@ class LocalStore:
     def drop_all(self) -> None:
         with self._lock:
             self._data.clear()
+            self._bytes = 0
 
     def drop_prefix(self, prefix: str) -> None:
         with self._lock:
             for k in [k for k in self._data if k.startswith(prefix)]:
-                del self._data[k]
+                self._bytes -= _sizeof(self._data.pop(k))
+
+    def drop_key(self, key: str) -> None:
+        with self._lock:
+            if key in self._data:
+                self._bytes -= _sizeof(self._data.pop(key))
+
+    @property
+    def resident_bytes(self) -> int:
+        with self._lock:
+            return self._bytes
 
 
 class Transport:
@@ -247,6 +263,12 @@ class DStore:
         self._write_lock = threading.Lock()
         # DCheck hook (see check.py): None = recording off, zero cost.
         self._tracer: TraceRecorder | None = None
+        # DPlan eviction hints: key -> Gets remaining before the key is
+        # provably dead (installed per instance by set_plan_reads).  Own
+        # lock so the countdown never nests inside _write_lock.
+        self._plan_lock = threading.Lock()
+        self._plan_reads: dict[str, int] = {}
+        self._peak_bytes = 0
 
     def attach_tracer(self, tracer: TraceRecorder | None) -> None:
         """Attach (or detach, with None) a :class:`TraceRecorder`.  Every
@@ -287,6 +309,7 @@ class DStore:
             # Metadata publish is what wakes consumers; in the real system it
             # is asynchronous w.r.t. the producer container, here just cheap.
             self.directory.publish(key, _sizeof(value), node, digest=digest)
+            self._note_peak()
         self.streams.notify_plain(key)   # wake get_stream fallbacks
 
     def get(self, node: str, key: str,
@@ -299,15 +322,20 @@ class DStore:
         """
         tracer = self._tracer
         if tracer is None:
-            return self._get(node, key, timeout)
-        tracer.record("get_block", key, node)
-        try:
             value = self._get(node, key, timeout)
-        except BaseException:
-            tracer.record("get_fail", key, node)
-            raise
-        tracer.record("get_return", key, node,
-                      digest=content_digest(value))
+        else:
+            tracer.record("get_block", key, node)
+            try:
+                value = self._get(node, key, timeout)
+            except BaseException:
+                tracer.record("get_fail", key, node)
+                raise
+            tracer.record("get_return", key, node,
+                          digest=content_digest(value))
+        # The plan countdown runs after get_return is recorded: the trace
+        # shows this read completing before any eviction it triggers.
+        if self._plan_reads:
+            self._plan_note_read(key)
         return value
 
     def _get(self, node: str, key: str,
@@ -347,6 +375,7 @@ class DStore:
                 store.write(key, value)
                 self.directory.publish(key, meta.size, node,  # new replica
                                        digest=meta.digest)
+                self._note_peak()
             return value
 
     # -- DStream chunked API (beyond-paper; see stream.py) -----------------
@@ -378,7 +407,62 @@ class DStore:
                                     digest=digest)
             self.stores[node].write(ck, chunk)
             self.directory.publish(ck, len(chunk), node, digest=digest)
+            self._note_peak()
         self.streams.publish_chunk(key, idx, len(chunk))
+
+    # -- DPlan eviction hints (see plan.py) --------------------------------
+    def set_plan_reads(self, prefix: str, reads: "Mapping[str, int]") -> None:
+        """Install the plan's eviction schedule for one instance: each raw
+        key's statically-known read count, namespaced under ``prefix``.
+        The countdown in :meth:`get` evicts a key the moment its last
+        planned read returns."""
+        with self._plan_lock:
+            for k, n in reads.items():
+                if n > 0:
+                    self._plan_reads[prefix + k] = n
+
+    def _plan_note_read(self, key: str) -> None:
+        evict = False
+        with self._plan_lock:
+            n = self._plan_reads.get(key)
+            if n is None:
+                return
+            if n <= 1:
+                del self._plan_reads[key]
+                evict = True
+            else:
+                self._plan_reads[key] = n - 1
+        if evict:
+            self.evict_key(key)
+
+    def evict_key(self, key: str) -> None:
+        """Single-key eviction: reclaim the bytes on every node plus the
+        directory record.  Safe exactly when no future Get of the key can
+        exist — which is what the plan's liveness analysis proves."""
+        with self._write_lock:
+            if self._tracer is not None and \
+                    self.directory.peek(key) is not None:
+                self._tracer.record("evict", key)
+            for store in self.stores.values():
+                store.drop_key(key)
+            self.directory.drop([key])
+
+    def resident_bytes(self) -> int:
+        """Bytes currently held across all node-local stores."""
+        return sum(s.resident_bytes for s in self.stores.values())
+
+    @property
+    def peak_resident_bytes(self) -> int:
+        return self._peak_bytes
+
+    def reset_peak(self) -> None:
+        self._peak_bytes = self.resident_bytes()
+
+    def _note_peak(self) -> None:
+        # Called with _write_lock held, right after bytes land.
+        cur = self.resident_bytes()
+        if cur > self._peak_bytes:
+            self._peak_bytes = cur
 
     def evict_instance(self, prefix: str) -> None:
         """Instance-scoped eviction (serving): when a workflow instance
@@ -397,6 +481,11 @@ class DStore:
                 store.drop_prefix(prefix)
             self.directory.drop_prefix(prefix)
         self.streams.evict_prefix(prefix)
+        if self._plan_reads:
+            with self._plan_lock:
+                for k in [k for k in self._plan_reads
+                          if k.startswith(prefix)]:
+                    del self._plan_reads[k]
 
     # -- fault handling ----------------------------------------------------
     def fail_node(self, node: str) -> list[str]:

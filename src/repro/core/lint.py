@@ -50,6 +50,12 @@ DF014    warning   undeclared external input: external_inputs declares
                    to a 1 MB external (likely a typo'd input)
 DF015    error     invalid resource spec (negative exec_time/cold_start,
                    non-positive cpu)
+DF016    warning   declared stream edge can never pipeline (emitted by
+                   the DPlan analyzer, not ``lint_workflow``: the
+                   consumer also waits on data that only exists after
+                   the stream closes)
+DF017    info      chunk size defeats stream pipelining (emitted by the
+                   DPlan analyzer: the whole stream fits one chunk)
 =======  ========  =====================================================
 
 Two entry points: :func:`lint_workflow` checks a constructed
@@ -94,6 +100,11 @@ CODES: dict[str, tuple[str, str]] = {
     "DF013": ("error", "dependency cycle"),
     "DF014": ("warning", "undeclared external input"),
     "DF015": ("error", "invalid resource spec"),
+    # DF016/DF017 are registered here for stable numbering/severities but
+    # emitted by the DPlan analyzer (repro.core.plan), which sees sizes
+    # and placement; lint_workflow stays purely structural.
+    "DF016": ("warning", "declared stream edge can never pipeline"),
+    "DF017": ("info", "chunk size defeats stream pipelining"),
 }
 
 # Separators reserved by the data plane: DServe namespaces instance keys

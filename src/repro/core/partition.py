@@ -32,7 +32,7 @@ def _edge_bytes(wf: Workflow) -> dict[tuple[str, str], float]:
             p = wf.producer.get(k)
             if p is None or p == f.name:
                 continue
-            sz = wf.functions[p].size_of(k)
+            sz = wf.key_bytes(k)
             out[(p, f.name)] = out.get((p, f.name), 0.0) + sz
     return out
 

@@ -223,6 +223,34 @@ class ContainerService:
         self._pools: dict[tuple[str, str], ContainerPool] = {}
         self._slots = {n: threading.Semaphore(int(max_per_node))
                        for n in self.nodes}
+        # DCheck hook: container lifecycle events land in the same trace
+        # as data-plane events, so PlanConformance can judge whether a
+        # cold boot was avoidable (an unleased container existed).
+        self._tracer = None
+
+    def attach_tracer(self, tracer) -> None:
+        self._tracer = tracer
+
+    def _pool_events(self, p: ContainerPool, pre: tuple[int, int, int, int],
+                     node: str, image: str, *, cold: bool | None = None,
+                     released: bool = False) -> None:
+        # Called with self._lock held, right after a pool transition;
+        # translates counter deltas into trace events (key = image).
+        tr = self._tracer
+        warm0, pw0, ev0, pb0 = pre
+        if released:
+            tr.record("container_release", image, node)
+        for _ in range(p.evictions - ev0):
+            tr.record("container_evict", image, node)
+        for _ in range(p.prewarm_boots - pb0):
+            tr.record("prewarm_boot", image, node)
+        if cold is True:
+            tr.record("cold_boot", image, node)
+        elif cold is False:
+            if p.warm_hits > warm0:
+                tr.record("warm_hit", image, node)
+            elif p.prewarm_hits > pw0:
+                tr.record("prewarm_hit", image, node)
 
     def pool(self, node: str, image: str,
              cold_start: float = 0.5) -> ContainerPool:
@@ -238,22 +266,33 @@ class ContainerService:
         """Lease a container, sleeping out its boot delay; returns whether
         the request paid a full cold start."""
         with self._lock:
-            delay, cold = self.pool(node, image, cold_start).acquire(
-                self._clock())
+            p = self.pool(node, image, cold_start)
+            pre = (p.warm_hits, p.prewarm_hits, p.evictions, p.prewarm_boots)
+            delay, cold = p.acquire(self._clock())
+            if self._tracer is not None:
+                self._pool_events(p, pre, node, image, cold=cold)
         if delay > 0:
             self._sleep(delay)
         return cold
 
     def release(self, node: str, image: str) -> None:
         with self._lock:
-            self._pools[(node, image)].release(self._clock())
+            p = self._pools[(node, image)]
+            pre = (p.warm_hits, p.prewarm_hits, p.evictions, p.prewarm_boots)
+            p.release(self._clock())
+            if self._tracer is not None:
+                self._pool_events(p, pre, node, image, released=True)
 
     def prewarm(self, node: str, image: str, cold_start: float = 0.5) -> None:
         """Dataflow-triggered prewarm (§3.2): begin booting the function's
         container the moment its precursor launches.  Returns immediately —
         readiness is a timestamp, not a thread."""
         with self._lock:
-            self.pool(node, image, cold_start).prewarm(self._clock())
+            p = self.pool(node, image, cold_start)
+            pre = (p.warm_hits, p.prewarm_hits, p.evictions, p.prewarm_boots)
+            p.prewarm(self._clock())
+            if self._tracer is not None:
+                self._pool_events(p, pre, node, image)
 
     @contextmanager
     def slot(self, node: str):
@@ -369,6 +408,7 @@ class ServeReport:
     prewarm_hits: int = 0
     evictions: int = 0
     container_seconds: float = 0.0
+    peak_resident_bytes: int = 0     # DStore high-water mark (DPlan metric)
 
     @property
     def latencies(self) -> list[float]:
@@ -402,6 +442,7 @@ class ServeReport:
             "warm_hits": self.warm_hits,
             "prewarm_hits": self.prewarm_hits,
             "container_seconds": round(self.container_seconds, 3),
+            "peak_resident_bytes": self.peak_resident_bytes,
         }
 
 
@@ -415,6 +456,13 @@ class DServe:
     mechanism — the engine ignores it under ``pattern="controlflow"``,
     whose baseline semantics boot a container only when a function becomes
     ready (the §5.5 ablation).
+
+    ``plan`` switches instances to DPlan-driven execution: ``True`` builds
+    a :func:`repro.core.plan.build_plan` from this serve's placement; a
+    prebuilt :class:`~repro.core.plan.WorkflowPlan` is used as-is.  Keys
+    are then evicted the moment their statically-last read returns
+    (instead of at instance completion) and container boots follow the
+    slack schedule instead of the precursor-launch heuristic.
     """
 
     def __init__(self, wf, *, n_nodes: int = 2, pattern: str = "dataflow",
@@ -422,7 +470,7 @@ class DServe:
                  max_per_node: int = 8, cold_start: float | None = None,
                  transport=None, get_timeout: float = 30.0,
                  evict_on_complete: bool = True, tracer=None,
-                 lint: bool = True):
+                 lint: bool = True, plan=None):
         from .dscheduler import DFlowEngine
         from .dstore import DStore
 
@@ -447,7 +495,13 @@ class DServe:
         self.store = DStore(self.engine.nodes, self.engine.transport)
         if tracer is not None:
             self.store.attach_tracer(tracer)
+            self.containers.attach_tracer(tracer)
         self.placement = self.engine.gs.assign(wf)
+        if plan is True:
+            from .plan import build_plan
+
+            plan = build_plan(wf, self.placement)
+        self.plan = plan if plan is not False else None
         self.evict_on_complete = evict_on_complete
         self._lock = threading.Lock()
         self._active: dict[str, Any] = {}      # instance -> InstanceRun
@@ -492,6 +546,7 @@ class DServe:
                     evictions=svc.evictions,
                     container_seconds=svc.container_seconds())
         self.max_concurrency = 0             # per-run high-water mark
+        self.store.reset_peak()              # per-run resident high-water
         t0 = time.monotonic()
         threads: list[threading.Thread] = []
 
@@ -532,7 +587,7 @@ class DServe:
             payload = inputs(i) if callable(inputs) else inputs
             run = InstanceRun(self.engine, self.wf, payload,
                               store=self.store, instance=stat.instance,
-                              placement=self.placement)
+                              placement=self.placement, plan=self.plan)
             # Register BEFORE starting: a node failure racing the start
             # must already see this instance to hand it its lost keys.
             with self._lock:
@@ -558,4 +613,5 @@ class DServe:
         report.evictions = svc.evictions - base["evictions"]
         report.container_seconds = (svc.container_seconds()
                                     - base["container_seconds"])
+        report.peak_resident_bytes = self.store.peak_resident_bytes
         return report

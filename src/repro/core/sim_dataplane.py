@@ -56,6 +56,11 @@ class DataMeta:
         return min(self.locations.items(), key=lambda kv: (kv[1], kv[0]))[0]
 
 
+def _strip_sim_ns(key: str) -> str:
+    """Simulator key "<wf>#<i>:<key>" -> raw workflow key."""
+    return key.split(":", 1)[1] if ":" in key else key
+
+
 class DStorePlane:
     """The paper's DStore over the simulated cluster."""
 
@@ -72,6 +77,22 @@ class DStorePlane:
         # may race the async 150us metadata publish; the local store knows
         # its own object sizes without consulting the directory)
         self.fetched_bytes = 0.0
+        # DPlan transfer pricing: when a WorkflowPlan is attached, every
+        # put/seed prices its key from the static transfer matrix instead
+        # of the dynamic caller-supplied size.  ``key_of`` maps simulator
+        # keys ("<wf>#<i>:<key>") back to plan keys.
+        self.plan = None
+        self.key_of = _strip_sim_ns
+        self.plan_priced = 0            # puts priced from the plan matrix
+
+    def _planned_size(self, key: str, size: float) -> float:
+        if self.plan is None:
+            return size
+        ps = self.plan.key_size(self.key_of(key))
+        if ps is None:
+            return size
+        self.plan_priced += 1
+        return float(ps)
 
     # -- helpers ---------------------------------------------------------
     def _publish(self, key: str, size: float, node: str) -> None:
@@ -86,6 +107,7 @@ class DStorePlane:
         self.env._at(self.env.now + self.cfg.meta_write, write)
 
     def seed(self, node: str, key: str, size: float) -> None:
+        size = self._planned_size(key, size)
         self.local[node].add(key)
         self.sizes[key] = size
         m = self.meta.setdefault(key, DataMeta(key, size))
@@ -96,6 +118,7 @@ class DStorePlane:
             consumers: Iterable[str] = (),
             ref_node: str | None = None) -> Event:
         done = self.env.event()
+        size = self._planned_size(key, size)
         self.sizes[key] = size
 
         def copied(_):
@@ -187,6 +210,7 @@ class StreamingDStorePlane(DStorePlane):
         """Announce the stream now; emit chunks across ``produce_time``.
         The returned event is producer-side completion (last chunk copied
         into the local store)."""
+        size = self._planned_size(key, size)
         n = max(1, math.ceil(size / self.chunk_size))
         sm = _SimStream(key, size, n, size / n)
         self.sizes[key] = size

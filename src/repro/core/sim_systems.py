@@ -91,6 +91,14 @@ class SimSystem:
         self._counter = itertools.count()
         self.results: list[InstanceResult] = []
         self._sandbox_booted: dict[str, Event] = {}  # node -> boot done
+        # DPlan: DStore-backed planes price transfers from the static
+        # matrix (plan.key_size) instead of trusting per-call sizes — the
+        # two agree by construction (one sizing helper, Workflow.key_bytes),
+        # so this pins the simulator to the analyzer's cost model.
+        if isinstance(plane, DStorePlane):
+            from .plan import build_plan
+
+            plane.plan = build_plan(wf, self.placement)
 
     # ------------------------------------------------------------------
     def image(self, fname: str) -> str:

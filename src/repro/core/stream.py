@@ -39,7 +39,7 @@ from dataclasses import dataclass, field
 from typing import Any, Iterable, Iterator
 
 __all__ = ["StreamBroken", "StreamDirectory", "StreamWriter", "StreamReader",
-           "chunk_key", "base_key", "DEFAULT_CHUNK"]
+           "chunk_key", "base_key", "chunk_count", "DEFAULT_CHUNK"]
 
 DEFAULT_CHUNK = 1 << 18          # 256 KiB
 _PREFETCH_DEPTH = 32             # reader-side bounded chunk queue
@@ -58,6 +58,14 @@ def base_key(key: str) -> str:
     plain keys).  Recovery uses this to map lost *chunk* records back to
     the producer function that must re-run."""
     return key.split(_CHUNK_SEP, 1)[0]
+
+
+def chunk_count(size: int, chunk_size: int = DEFAULT_CHUNK) -> int:
+    """Chunks a ``size``-byte stream splits into (at least 1: empty
+    streams still emit a terminating chunk record)."""
+    if chunk_size <= 0:
+        return 1
+    return max(1, -(-int(size) // int(chunk_size)))
 
 
 class StreamBroken(RuntimeError):
