@@ -1,0 +1,165 @@
+"""DShard routing efficiency: hop-count histogram, tier traffic, tail cost.
+
+One JSON (``BENCH_dshard.json``) answering the ISSUE 8 acceptance gate:
+
+1. **Hop counts (threaded)** — DServe over a sharded DStore at ``--nodes``
+   nodes on the serving workloads (Srv chain, SrvF scatter/gather): the
+   per-store histogram of Get resolutions.  0 hops = local bytes; 1 hop =
+   routed straight to the producing shard; 2 hops = stale-table misroute
+   (a trace-checker violation).  The gate: **>= 95% of routed (cross-
+   shard) Gets resolve in exactly 1 hop** — in practice 100%, because
+   routing tables are synced from the coordinator, never guessed.
+2. **Transport tiers (threaded)** — the same runs priced through
+   :class:`~repro.core.router.TieredTransport`: bytes over ipc (same
+   container), mem (same node) and net (cross-node — the only tier that
+   pays bandwidth), plus the plain cross-node byte counter for
+   comparability with the single-store baseline.
+3. **Tail cost (simulated, deterministic)** — ``dflow-shard`` vs
+   ``dflow`` p99 on the paper's builtin workloads at Fig. 9 operating
+   point: sharding must be free or better (local routing removes the
+   central directory round-trip).  Asserted per workload.
+
+Run:  PYTHONPATH=src python -m benchmarks.dshard_routing \
+          [--smoke] [--nodes N] [--out FILE]
+"""
+
+import argparse
+import json
+
+from repro.core import make_workflow, run_open_loop
+from repro.core.router import TIER_IPC, TIER_MEM, TIER_NET, TieredTransport
+from repro.core.serve import DServe, poisson_arrivals
+from repro.core.workloads import serving_chain, serving_fanout
+
+FULL = dict(rate=8.0, n=30, repeats=3, sim_invocations=5)
+SMOKE = dict(rate=8.0, n=8, repeats=1, sim_invocations=3)
+
+SIM_BENCHES = ["WC", "Gen", "Soy"]
+
+
+def _serve_workloads():
+    return {
+        "Srv": lambda: serving_chain(stages=4, exec_time=0.03,
+                                     cold_start=0.15, payload=16 * 1024),
+        "SrvF": lambda: serving_fanout(workers=4, exec_time=0.03,
+                                       cold_start=0.15, payload=16 * 1024),
+    }
+
+
+def _serve_once(mk_wf, *, n_nodes, sharded, rate, n):
+    transport = TieredTransport() if sharded else None
+    srv = DServe(mk_wf(), n_nodes=n_nodes, pattern="dataflow",
+                 keepalive=10.0, max_per_node=16, transport=transport,
+                 sharded=sharded)
+    rep = srv.run(poisson_arrivals(rate, n, seed=7),
+                  inputs={"request": b"req"})
+    assert rep.failures == 0, "instances failed during benchmark"
+    return rep, srv
+
+
+def routed_1hop_fraction(hop_hist):
+    routed = sum(v for h, v in hop_hist.items() if h >= 1)
+    return 1.0 if routed == 0 else hop_hist.get(1, 0) / routed
+
+
+def measure_serving(name, mk_wf, *, n_nodes, rate, n, repeats):
+    """Best-of-``repeats`` sharded run vs single-store baseline, plus the
+    routing/tier counters of the best sharded run."""
+    shard_best = None
+    for _ in range(repeats):
+        rep, srv = _serve_once(mk_wf, n_nodes=n_nodes, sharded=True,
+                               rate=rate, n=n)
+        if shard_best is None or rep.wall_time < shard_best[0].wall_time:
+            shard_best = (rep, srv)
+    single = min((_serve_once(mk_wf, n_nodes=n_nodes, sharded=False,
+                              rate=rate, n=n)[0] for _ in range(repeats)),
+                 key=lambda r: r.wall_time)
+
+    rep, srv = shard_best
+    hops = {int(k): v for k, v in srv.store.hop_hist.items()}
+    t = srv.engine.transport
+    return {
+        "nodes": n_nodes,
+        "requests": n,
+        "hop_hist": hops,
+        "one_hop_fraction": round(routed_1hop_fraction(hops), 4),
+        "tier_gets": dict(srv.store.tier_gets),
+        "tier_bytes": dict(t.tier_bytes),
+        "cross_node_bytes": t.bytes_moved,
+        "cross_node_transfers": t.transfers,
+        "table_refreshes": sum(tb.refreshes
+                               for tb in srv.store.tables.values()),
+        "coordinator_syncs": srv.store.coordinator.syncs,
+        "p99_s": round(rep.p99, 4),
+        "p99_single_store_s": round(single.p99, 4),
+        "p99_ratio": round(rep.p99 / max(single.p99, 1e-9), 3),
+        "peak_resident_bytes": rep.peak_resident_bytes,
+        "peak_resident_per_node": dict(rep.peak_resident_per_node),
+    }
+
+
+def measure_sim(*, sim_invocations):
+    """Deterministic Fig. 9-point p99: dflow-shard vs dflow per builtin."""
+    out = {}
+    for bench in SIM_BENCHES:
+        wf = make_workflow(bench)
+        shard = run_open_loop("dflow-shard", wf, rate_per_min=6,
+                              n_invocations=sim_invocations).p99
+        plain = run_open_loop("dflow", wf, rate_per_min=6,
+                              n_invocations=sim_invocations).p99
+        assert shard <= plain + 1e-6, (bench, shard, plain)
+        out[bench] = {"p99_shard_s": round(shard, 3),
+                      "p99_single_s": round(plain, 3),
+                      "ratio": round(shard / max(plain, 1e-9), 3)}
+    return out
+
+
+def measure(*, n_nodes, cfg):
+    serving = {name: measure_serving(name, mk, n_nodes=n_nodes,
+                                     rate=cfg["rate"], n=cfg["n"],
+                                     repeats=cfg["repeats"])
+               for name, mk in sorted(_serve_workloads().items())}
+    return {
+        "bench": "dshard_routing",
+        "config": {"nodes": n_nodes, **cfg},
+        "serving": serving,
+        "sim_p99": measure_sim(sim_invocations=cfg["sim_invocations"]),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_dshard.json",
+                    help="output JSON path (default: BENCH_dshard.json)")
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small/fast configuration (CI)")
+    args = ap.parse_args(argv)
+    doc = measure(n_nodes=args.nodes, cfg=SMOKE if args.smoke else FULL)
+    with open(args.out, "w", encoding="utf-8") as fh:
+        json.dump(doc, fh, indent=2)
+        fh.write("\n")
+    print(json.dumps(doc, indent=2))
+
+    for name, row in doc["serving"].items():
+        frac = row["one_hop_fraction"]
+        assert frac >= 0.95, (
+            f"{name}: only {frac:.1%} of routed Gets resolved in 1 hop "
+            "(stale-table misroutes or directory bounces on the hot path)")
+        assert row["hop_hist"].get(2, 0) == 0, (name, row["hop_hist"])
+        assert row["tier_bytes"][TIER_NET] == row["cross_node_bytes"]
+        print(f"# {name}: {frac:.1%} of routed Gets at exactly 1 hop, "
+              f"{row['cross_node_bytes']} cross-node B "
+              f"(ipc {row['tier_bytes'][TIER_IPC]} / "
+              f"mem {row['tier_bytes'][TIER_MEM]} / "
+              f"net {row['tier_bytes'][TIER_NET]}), "
+              f"p99 {row['p99_ratio']:.2f}x single-store")
+    worst = max(r["ratio"] for r in doc["sim_p99"].values())
+    print(f"# sim p99 (dflow-shard vs dflow, Fig. 9 point): worst ratio "
+          f"{worst:.3f} over {', '.join(SIM_BENCHES)} — sharding never "
+          "costs tail latency")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -55,9 +55,10 @@ def main():
             continue
         red = 100 * (1 - p99["dflow"] / p99[base])
         print(f"DFlow p99 reduction vs {base:16s}: {red:5.1f}%")
-    # dflow-stream is our beyond-paper extension — expected to beat dflow.
+    # dflow-stream / dflow-shard are our beyond-paper extensions —
+    # expected to beat dflow.
     assert all(p99["dflow"] <= p99[s] + 1e-9 for s in SYSTEMS
-               if s != "dflow-stream")
+               if s not in ("dflow-stream", "dflow-shard"))
     print("\nDFlow wins on every paper baseline ✓")
     serve_section()
 

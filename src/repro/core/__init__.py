@@ -5,6 +5,8 @@ Layers:
 * :mod:`repro.core.dag`          — workflow DAG model + parser.
 * :mod:`repro.core.partition`    — Global-Scheduler DAG partitioning.
 * :mod:`repro.core.dstore`       — real threaded DStore (Table 1 API).
+* :mod:`repro.core.router`       — DShard: per-node DStore shards behind
+  local routing tables + a coordinator (1-hop transfers, transport tiers).
 * :mod:`repro.core.stream`       — DStream: chunked pipelined Get/Put
   (beyond-paper; overlaps producer writes with consumer reads).
 * :mod:`repro.core.dscheduler`   — real threaded DScheduler + engine.
@@ -32,7 +34,9 @@ from .lint import (Diagnostic, WorkflowLintError, check_workflow, lint,
                    lint_workflow)
 from .experiments import (ExperimentResult, cold_start_latency,
                           percentile, run_closed_loop, run_open_loop)
-from .partition import cut_bytes, partition_workflow
+from .partition import cut_bytes, partition_workflow, stage_node
+from .router import (Coordinator, RoutingTable, ShardedDStore,
+                     TieredTransport, routes_from_plan, static_routes)
 from .serve import (ContainerPool, ContainerService, DServe, ServeReport,
                     poisson_arrivals, trace_arrivals)
 from .sim_systems import SYSTEMS, make_system
@@ -54,7 +58,9 @@ __all__ = [
     "poisson_arrivals", "trace_arrivals",
     "ExperimentResult", "cold_start_latency", "percentile",
     "run_closed_loop", "run_open_loop",
-    "cut_bytes", "partition_workflow",
+    "cut_bytes", "partition_workflow", "stage_node",
+    "Coordinator", "RoutingTable", "ShardedDStore", "TieredTransport",
+    "routes_from_plan", "static_routes",
     "SYSTEMS", "make_system", "SimConfig",
     "BENCHMARKS", "make_workflow",
 ]

@@ -30,7 +30,12 @@ census.  This module makes those load-bearing invariants checkable:
     in-flight (``get_block`` without a matching return/fail);
   - **chunk sequence**: a closed stream's chunk indices are exactly
     ``0..total-1``, closes agree on ``total``, and duplicate chunk
-    publishes are byte-identical.
+    publishes are byte-identical;
+  - **routing** (DShard, see router.py): every routed Get resolves in
+    exactly one hop (``route`` events with ``hops != 1`` — a stale-table
+    misroute or directory bounce — are hard failures), and it resolves at
+    the key's producing shard (the home announced by the put/publish
+    events' ``src``).
 
 Recording points sit *before* the mutation they describe (inside the same
 lock that orders the mutation), so trace order is a faithful linearization:
@@ -109,6 +114,9 @@ class TraceEvent:
     idx: int | None = None           # chunk index (put_chunk)
     size: int = 0
     digest: str | None = None        # content digest; None = opaque value
+    src: str = ""                    # DShard: key's home shard (put/route)
+    tier: str = ""                   # DShard transport tier (route events)
+    hops: int = 0                    # DShard: shard contacts for one Get
 
     def __str__(self) -> str:        # pragma: no cover - debugging aid
         extra = f"[{self.idx}]" if self.idx is not None else ""
@@ -138,12 +146,14 @@ class TraceRecorder:
 
     def record(self, kind: str, key: str = "", node: str = "", *,
                idx: int | None = None, size: int = 0,
-               digest: str | None = None) -> TraceEvent:
+               digest: str | None = None, src: str = "",
+               tier: str = "", hops: int = 0) -> TraceEvent:
         delay = 0.0
         with self._lock:
             self._clock += 1
             ev = TraceEvent(self._clock, kind, key, node,
-                            idx=idx, size=size, digest=digest)
+                            idx=idx, size=size, digest=digest,
+                            src=src, tier=tier, hops=hops)
             self._events.append(ev)
             if self._stress is not None:
                 self._stress = (1103515245 * self._stress + 12345) \
@@ -172,7 +182,8 @@ class TraceRecorder:
 class Violation:
     """One invariant breach found by :class:`TraceChecker`."""
 
-    invariant: str       # ordering | immutability | eviction | chunk_sequence
+    invariant: str       # ordering | immutability | eviction |
+    #                      chunk_sequence | routing
     message: str
     events: tuple[TraceEvent, ...] = ()
 
@@ -191,6 +202,7 @@ class _KeyState:
     opaque_writes: int = 0
     in_flight: dict[str, int] = field(default_factory=dict)  # node -> gets
     first_write: TraceEvent | None = None
+    home: str = ""       # DShard: producing shard (from put/publish src)
 
 
 class TraceChecker:
@@ -243,6 +255,8 @@ class TraceChecker:
             s = st(ev.key) if ev.key else None
             if ev.kind in _AVAILABILITY:
                 s.available = True
+                if ev.src:
+                    s.home = ev.src      # last announced home shard wins
                 if s.first_write is None:
                     s.first_write = ev
                 if ev.digest is None:
@@ -280,6 +294,22 @@ class TraceChecker:
                             f"Get({ev.key!r}) returned bytes that match "
                             "no published content for that key "
                             "(stale or torn read)", (ev,)))
+            elif ev.kind == "route":
+                # -- routing (DShard): a routed Get contacts exactly one
+                # shard — the key's statically-known producing shard.
+                if ev.hops != 1:
+                    out.append(Violation(
+                        "routing",
+                        f"Get({ev.key!r}) on {ev.node!r} resolved in "
+                        f"{ev.hops} hop(s) (stale-table misroute or "
+                        "directory bounce); DShard requires exactly 1",
+                        (ev,)))
+                if ev.src and s.home and ev.src != s.home:
+                    out.append(Violation(
+                        "routing",
+                        f"Get({ev.key!r}) resolved at shard {ev.src!r} "
+                        f"but the key's producing shard is {s.home!r}",
+                        (ev,)))
             elif ev.kind == "put_chunk":
                 rec = chunks.setdefault(ev.key, {})
                 prev = rec.get(ev.idx)

@@ -40,7 +40,8 @@ from typing import Any, Mapping
 
 from .dag import FunctionSpec, Workflow
 from .dstore import DStore, Transport
-from .partition import partition_workflow
+from .partition import partition_workflow, stage_node
+from .router import ShardedDStore
 from .stream import StreamBroken, base_key
 
 __all__ = ["GlobalScheduler", "DFlowEngine", "InstanceRun", "RunReport",
@@ -125,8 +126,12 @@ class InstanceRun:
         self.engine = engine
         self.wf = wf
         self.inputs = dict(inputs or {})
-        self.store = store if store is not None else DStore(
-            engine.nodes, engine.transport)
+        if store is not None:
+            self.store = store
+        elif engine.sharded:
+            self.store = ShardedDStore(engine.nodes, engine.transport)
+        else:
+            self.store = DStore(engine.nodes, engine.transport)
         self.instance = instance
         self._ns = f"{instance}:" if instance else ""
         self.placement = dict(placement) if placement is not None \
@@ -173,12 +178,15 @@ class InstanceRun:
         self._started = True
         self.t0 = time.monotonic()
         wf, placement, store = self.wf, self.placement, self.store
+        # Sharded stores learn this instance's static routes (from the
+        # placement, refined by the plan's transfer matrix) before any
+        # staging Put so those Puts land on their planned home shards.
+        register = getattr(store, "register_instance", None)
+        if register is not None:
+            register(self._ns, wf, placement, plan=self.plan)
         for k, v in self.inputs.items():
             # Stage external inputs on the node of each first consumer.
-            consumers = [f.name for f in wf.functions.values()
-                         if k in f.inputs]
-            node = placement[consumers[0]] if consumers \
-                else self.engine.nodes[0]
+            node = stage_node(wf, k, placement, self.engine.nodes[0])
             store.put(node, self.ns(k), v)
         if self.plan is not None:
             store.set_plan_reads(self._ns, self.plan.eviction_reads)
@@ -426,10 +434,8 @@ class InstanceRun:
         # wedge every consumer until Get timed out).
         for k in mine:
             if k in self.inputs and k not in wf.producer:
-                consumers = [f.name for f in wf.functions.values()
-                             if k in f.inputs]
-                node = self.placement[consumers[0]] if consumers \
-                    else self.engine.nodes[0]
+                node = stage_node(wf, k, self.placement,
+                                  self.engine.nodes[0])
                 self.store.put(node, self.ns(k), self.inputs[k])
         # Chunk records of an in-flight stream map back to the stream key,
         # whose producer must re-run (it re-claims the aborted stream and
@@ -465,6 +471,10 @@ class DFlowEngine:
     providing explicit container lifecycle (cold boot / keep-alive /
     prewarm) and bounded per-node execution slots; ``prewarm`` enables the
     §3.2 dataflow-triggered prewarm of successor containers at launch.
+    ``sharded`` (DShard, router.py): instances get a
+    :class:`~repro.core.router.ShardedDStore` — per-node directory shards
+    with local routing tables and 1-hop transfers — instead of the
+    single-directory :class:`DStore`; results are byte-identical.
     """
 
     def __init__(self, n_nodes: int = 2, *, pattern: str = "dataflow",
@@ -472,7 +482,7 @@ class DFlowEngine:
                  get_timeout: float = 120.0,
                  straggler_factor: float | None = None,
                  containers=None, prewarm: bool = True,
-                 lint: bool = True):
+                 lint: bool = True, sharded: bool = False):
         if pattern not in ("dataflow", "controlflow"):
             raise ValueError(pattern)
         self.nodes = [f"node{i}" for i in range(n_nodes)]
@@ -484,6 +494,7 @@ class DFlowEngine:
         self.containers = containers
         self.prewarm = prewarm
         self.lint = lint
+        self.sharded = sharded
 
     # ------------------------------------------------------------------
     def start(self, wf: Workflow, inputs: Mapping[str, Any] | None = None,

@@ -191,6 +191,7 @@ class LocalStore:
         self._lock = threading.Lock()
         self._data: dict[str, Any] = {}
         self._bytes = 0
+        self._peak = 0
 
     def write(self, key: str, value: Any) -> None:
         with self._lock:
@@ -198,6 +199,8 @@ class LocalStore:
                 self._bytes -= _sizeof(self._data[key])
             self._data[key] = value
             self._bytes += _sizeof(value)
+            if self._bytes > self._peak:
+                self._peak = self._bytes
 
     def read(self, key: str) -> Any:
         with self._lock:
@@ -226,6 +229,17 @@ class LocalStore:
     def resident_bytes(self) -> int:
         with self._lock:
             return self._bytes
+
+    @property
+    def peak_bytes(self) -> int:
+        """High-water mark of this node's resident bytes — the per-node
+        figure DPlan's ``peak_resident`` prediction is comparable to."""
+        with self._lock:
+            return self._peak
+
+    def reset_peak(self) -> None:
+        with self._lock:
+            self._peak = self._bytes
 
 
 class Transport:
@@ -453,10 +467,19 @@ class DStore:
 
     @property
     def peak_resident_bytes(self) -> int:
+        """Cluster-wide peak of summed resident bytes (historic metric)."""
         return self._peak_bytes
+
+    def peak_resident_per_node(self) -> dict[str, int]:
+        """Per-node high-water marks — what capacity planning actually
+        needs (a node provisions for ITS peak, not the cluster sum), and
+        the measured twin of ``WorkflowPlan.peak_resident``."""
+        return {n: s.peak_bytes for n, s in self.stores.items()}
 
     def reset_peak(self) -> None:
         self._peak_bytes = self.resident_bytes()
+        for s in self.stores.values():
+            s.reset_peak()
 
     def _note_peak(self) -> None:
         # Called with _write_lock held, right after bytes land.

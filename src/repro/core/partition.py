@@ -21,7 +21,22 @@ from typing import Mapping, Sequence
 
 from .dag import Workflow
 
-__all__ = ["partition_workflow", "cut_bytes"]
+__all__ = ["partition_workflow", "cut_bytes", "stage_node"]
+
+
+def stage_node(wf: Workflow, key: str, placement: Mapping[str, str],
+               default: str | None = None) -> str | None:
+    """Node where an external input is staged: its *first* consumer's node
+    (the trigger payload lands where it is first needed), or ``default``
+    when nothing consumes the key.  The single authority for staging-home
+    decisions — ``InstanceRun.start``, DPlan's transfer matrix and DShard's
+    static routing tables must all agree on it, otherwise the planner's
+    locality classification (and the router's 1-hop invariant) would
+    diverge from what the runtime actually does."""
+    for f in wf.functions.values():
+        if key in f.inputs:
+            return placement[f.name]
+    return default
 
 
 def _edge_bytes(wf: Workflow) -> dict[tuple[str, str], float]:

@@ -52,6 +52,7 @@ from typing import Any, Mapping
 
 from .dag import Workflow
 from .lint import Diagnostic
+from .partition import stage_node
 from .stream import chunk_count
 
 __all__ = ["KeyPlan", "FunctionPlan", "TransferPlan", "WorkflowPlan",
@@ -288,14 +289,14 @@ def _transfers(wf: Workflow, keys: Mapping[str, KeyPlan],
                placement: Mapping[str, str] | None
                ) -> tuple[TransferPlan, ...]:
     # External inputs are staged on the node of each key's *first*
-    # consumer (InstanceRun.start semantics); other consumers pull.
-    stage_node: dict[str, str] = {}
+    # consumer (partition.stage_node — the same authority InstanceRun and
+    # DShard's routing tables use); other consumers pull.
+    staged: dict[str, str] = {}
     if placement is not None:
         for k in wf.external_inputs:
-            for f in wf.functions.values():
-                if k in f.inputs:
-                    stage_node[k] = placement[f.name]
-                    break
+            n = stage_node(wf, k, placement)
+            if n is not None:
+                staged[k] = n
     out: list[TransferPlan] = []
     for f in wf.functions.values():
         for k in sorted(set(f.inputs)):
@@ -310,7 +311,7 @@ def _transfers(wf: Workflow, keys: Mapping[str, KeyPlan],
             src = dst = local = None
             if placement is not None:
                 src = placement[prod] if prod is not None \
-                    else stage_node.get(k)
+                    else staged.get(k)
                 dst = placement[f.name]
                 local = src == dst
             out.append(TransferPlan(

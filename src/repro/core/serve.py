@@ -408,7 +408,12 @@ class ServeReport:
     prewarm_hits: int = 0
     evictions: int = 0
     container_seconds: float = 0.0
-    peak_resident_bytes: int = 0     # DStore high-water mark (DPlan metric)
+    # Max over per-node DStore high-water marks: a node provisions for its
+    # OWN peak, and under DShard the stores really are per-node shards —
+    # summing them (the old definition) overstated the capacity a node
+    # needs and was incomparable to DPlan's per-node peak_resident.
+    peak_resident_bytes: int = 0
+    peak_resident_per_node: dict = field(default_factory=dict)
 
     @property
     def latencies(self) -> list[float]:
@@ -463,6 +468,10 @@ class DServe:
     are then evicted the moment their statically-last read returns
     (instead of at instance completion) and container boots follow the
     slack schedule instead of the precursor-launch heuristic.
+
+    ``sharded`` serves over a :class:`~repro.core.router.ShardedDStore`
+    (DShard): per-node directory shards, local routing tables and 1-hop
+    transfers — byte-identical results, no central metadata hotspot.
     """
 
     def __init__(self, wf, *, n_nodes: int = 2, pattern: str = "dataflow",
@@ -470,9 +479,10 @@ class DServe:
                  max_per_node: int = 8, cold_start: float | None = None,
                  transport=None, get_timeout: float = 30.0,
                  evict_on_complete: bool = True, tracer=None,
-                 lint: bool = True, plan=None):
+                 lint: bool = True, plan=None, sharded: bool = False):
         from .dscheduler import DFlowEngine
         from .dstore import DStore
+        from .router import ShardedDStore
 
         if lint:
             # Lint once at serve-construction time (the request path
@@ -492,7 +502,9 @@ class DServe:
                                   get_timeout=get_timeout,
                                   containers=self.containers,
                                   prewarm=prewarm)
-        self.store = DStore(self.engine.nodes, self.engine.transport)
+        self.sharded = sharded
+        store_cls = ShardedDStore if sharded else DStore
+        self.store = store_cls(self.engine.nodes, self.engine.transport)
         if tracer is not None:
             self.store.attach_tracer(tracer)
             self.containers.attach_tracer(tracer)
@@ -613,5 +625,7 @@ class DServe:
         report.evictions = svc.evictions - base["evictions"]
         report.container_seconds = (svc.container_seconds()
                                     - base["container_seconds"])
-        report.peak_resident_bytes = self.store.peak_resident_bytes
+        per_node = self.store.peak_resident_per_node()
+        report.peak_resident_per_node = per_node
+        report.peak_resident_bytes = max(per_node.values(), default=0)
         return report

@@ -24,6 +24,11 @@ Planes:
 * :class:`HybridPlane`   — FaaSFlow / FaaSFlowRedis / KNIX: local Redis for
   intra-node exchange + a central store (CouchDB or Redis) on the master for
   inter-node exchange.
+* :class:`ShardedDStorePlane` — DStore + **DShard** (beyond-paper,
+  router.py): per-node directory shards + local routing tables — Gets
+  resolve 1-hop at the producing node's shard, and same-container (ipc) /
+  same-node (mem) / cross-node (net) transport tiers are priced
+  distinctly.
 * :class:`StreamingDStorePlane` — DStore + **DStream** (beyond-paper):
   producers publish fixed-size chunks *while executing* and consumers pull
   chunk-by-chunk, so inter-node transfer overlaps output production.
@@ -36,11 +41,12 @@ import math
 from dataclasses import dataclass, field
 from typing import Iterable
 
+from .router import TIER_IPC, TIER_MEM, TIER_NET
 from .sim import Env, Event, all_of
 from .simcluster import MASTER, Cluster, SimConfig
 
-__all__ = ["DStorePlane", "StreamingDStorePlane", "CentralPlane",
-           "HybridPlane", "DataMeta"]
+__all__ = ["DStorePlane", "ShardedDStorePlane", "StreamingDStorePlane",
+           "CentralPlane", "HybridPlane", "DataMeta"]
 
 
 @dataclass
@@ -159,6 +165,113 @@ class DStorePlane:
             m.locations.setdefault(node, 0)   # new replica registered
         # 5. local store -> container copy.
         yield self.cluster.local_copy(m.size)
+        return m.size
+
+
+class ShardedDStorePlane(DStorePlane):
+    """DStore + DShard (router.py): per-node directory shards behind local
+    routing tables, with the three transport tiers priced distinctly.
+
+    Differences from the base plane, mirroring the threaded
+    :class:`~repro.core.router.ShardedDStore`:
+
+    * a Get that misses locally pays a node-local ``route_lookup`` (no
+      master round trip) and contacts the key's home shard directly —
+      one one-way message + the shard's directory service time (1 hop);
+      only an *unrouted* key falls back to the master directory bounce
+      (2 hops, counted in ``hop_hist``);
+    * local hits are tiered: a key homed on the consumer's own node (its
+      trigger payload or own output) is an ``ipc`` handoff; a local
+      replica of a remotely-homed key is a ``mem`` memoryview handoff
+      (``mem_op`` + size/``mem_bw``) — both cheaper than the base plane's
+      uniform gRPC ``local_op``/``local_bw`` copy;
+    * the final store→container copy after a network pull also rides the
+      ``mem`` tier (the pull landed the bytes in this node's shard).
+
+    Routes are installed by ``SimSystem`` from the same
+    :func:`~repro.core.router.static_routes` the threaded store uses.
+    """
+
+    name = "dstore-shard"
+
+    def __init__(self, env: Env, cluster: Cluster):
+        super().__init__(env, cluster)
+        self.routes: dict[str, str] = {}       # raw key -> home node
+        self.seeded: dict[str, str] = {}       # sim key -> staging node
+        self.hop_hist: dict[int, int] = {0: 0, 1: 0, 2: 0}
+        self.tier_gets = {TIER_IPC: 0, TIER_MEM: 0, TIER_NET: 0}
+        self.tier_bytes = {TIER_IPC: 0.0, TIER_MEM: 0.0, TIER_NET: 0.0}
+
+    def install_routes(self, routes: dict[str, str]) -> None:
+        self.routes.update(routes)
+
+    def route_of(self, key: str) -> str | None:
+        return self.routes.get(self.key_of(key))
+
+    def seed(self, node: str, key: str, size: float) -> None:
+        super().seed(node, key, size)
+        self.seeded.setdefault(key, node)
+
+    def put(self, node: str, key: str, size: float,
+            consumers: Iterable[str] = (),
+            ref_node: str | None = None) -> Event:
+        # Dynamic registration: un-routed keys home on their writer.
+        self.routes.setdefault(self.key_of(key), node)
+        return super().put(node, key, size, consumers, ref_node)
+
+    def _tiered(self, tier: str, size: float) -> None:
+        self.tier_gets[tier] += 1
+        self.tier_bytes[tier] += size
+
+    def _get(self, node: str, key: str):
+        cfg = self.cfg
+        if key in self.local[node]:
+            size = self.sizes[key]
+            if self.seeded.get(key) == node or self.route_of(key) == node:
+                # Same-container: the payload is already inside (ipc).
+                yield self.env.timeout(cfg.ipc_latency)
+                self._tiered(TIER_IPC, size)
+            else:
+                # Same-node replica: memoryview handoff, no gRPC copy.
+                yield self.env.timeout(cfg.mem_op + size / cfg.mem_bw)
+                self._tiered(TIER_MEM, size)
+            self.hop_hist[0] += 1
+            return size
+        # Node-local routing table (no master round trip).
+        yield self.env.timeout(cfg.route_lookup)
+        home = self.route_of(key)
+        if home is None:
+            # Unrouted key: master directory bounce — 2 hops, the exact
+            # resolution the trace checker flags on the threaded path.
+            yield self.env.timeout(cfg.msg_latency + cfg.meta_query)
+            hops = 2
+        else:
+            # Direct request to the home shard: one-way message (none if
+            # the home is this node) + its directory service time.
+            extra = 0.0 if home == node else cfg.msg_latency / 2
+            yield self.env.timeout(extra + cfg.meta_query)
+            hops = 1
+        m = self.meta.get(key)
+        if m is None:
+            ev = self.env.event()
+            self._waiters.setdefault(key, []).append(ev)
+            m = yield ev
+        if key not in self.local[node]:
+            src = m.best_location()
+            m.locations[src] += 1
+            yield self.cluster.network.transfer(src, node, m.size,
+                                                tag=f"dshard:{key}")
+            m.locations[src] -= 1
+            self.fetched_bytes += m.size
+            self.local[node].add(key)
+            m.locations.setdefault(node, 0)
+            self._tiered(TIER_NET, m.size)
+        else:
+            self._tiered(TIER_MEM, m.size)
+        self.hop_hist[hops] = self.hop_hist.get(hops, 0) + 1
+        # Shard store -> container over the mem tier (bytes are node-local
+        # now; no gRPC re-serialisation).
+        yield self.env.timeout(cfg.mem_op + m.size / cfg.mem_bw)
         return m.size
 
 

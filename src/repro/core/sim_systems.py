@@ -16,6 +16,10 @@ system            invocation pattern          data plane
 ``dflow``         **dataflow (Algorithm 1)**  DStorePlane
 ``dflow-stream``  **dataflow (Algorithm 1)**  StreamingDStorePlane (DStream:
                                               chunked pipelined exchange)
+``dflow-shard``   **dataflow (Algorithm 1)**  ShardedDStorePlane (DShard:
+                                              per-node shards, local routing
+                                              tables, 1-hop + tiered
+                                              transports)
 ================  ==========================  ============================
 
 The dataflow local scheduler implements the paper's Algorithm 1 exactly:
@@ -36,13 +40,13 @@ from .dag import Workflow
 from .partition import partition_workflow
 from .sim import Env, Event, all_of
 from .sim_dataplane import (CentralPlane, DStorePlane, HybridPlane,
-                            StreamingDStorePlane)
+                            ShardedDStorePlane, StreamingDStorePlane)
 from .simcluster import MASTER, Cluster, SimConfig
 
 __all__ = ["make_system", "SimSystem", "InstanceResult", "SYSTEMS"]
 
 SYSTEMS = ("cflow", "faasflow", "faasflowredis", "knix",
-           "faasflow+dstore", "dflow", "dflow-stream")
+           "faasflow+dstore", "dflow", "dflow-stream", "dflow-shard")
 
 
 @dataclass
@@ -99,6 +103,14 @@ class SimSystem:
             from .plan import build_plan
 
             plane.plan = build_plan(wf, self.placement)
+        if isinstance(plane, ShardedDStorePlane):
+            # DShard: the plane's routing table comes from the same
+            # static_routes the threaded ShardedDStore installs (raw keys;
+            # the plane's key_of strips the instance namespace).
+            from .router import static_routes
+
+            plane.install_routes(
+                static_routes(wf, self.placement, cluster.workers()))
 
     # ------------------------------------------------------------------
     def image(self, fname: str) -> str:
@@ -412,4 +424,12 @@ def make_system(name: str, env: Env, cluster: Cluster,
                          plane=StreamingDStorePlane(env, cluster),
                          prewarm=False, sandbox=False, central_sched=False,
                          name=name, streaming=True)
+    if name == "dflow-shard":
+        # DFlow + DShard: Algorithm 1 invocation over per-node DStore
+        # shards with local routing tables — 1-hop transfers and tiered
+        # ipc/mem/net transports (beyond-paper; see core/router.py).
+        return SimSystem(env, cluster, wf, pattern="dataflow",
+                         plane=ShardedDStorePlane(env, cluster),
+                         prewarm=False, sandbox=False, central_sched=False,
+                         name=name)
     raise ValueError(f"unknown system {name!r}; choose from {SYSTEMS}")

@@ -41,6 +41,13 @@ class SimConfig:
     knix_process_start: float = 0.02      # KNIX in-container process fork
     max_containers: int = 96              # 32GB / 256MB, with headroom
     timeout: float = 60.0                 # experiment timeout (paper: 60 s)
+    # DShard transport tiers (router.py / ShardedDStorePlane): routed Gets
+    # resolve against a node-local table and hand bytes over the cheapest
+    # applicable tier instead of the uniform local_op/local_bw gRPC path.
+    route_lookup: float = 2e-6            # local routing-table lookup
+    ipc_latency: float = 5e-6             # same-container handoff (ipc tier)
+    mem_op: float = 60e-6                 # same-node memoryview op (mem tier)
+    mem_bw: float = 8e9                   # same-node shared-memory bandwidth
 
     def worker_names(self) -> list[str]:
         return [f"node{i + 1}" for i in range(self.n_workers)]

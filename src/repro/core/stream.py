@@ -39,7 +39,8 @@ from dataclasses import dataclass, field
 from typing import Any, Iterable, Iterator
 
 __all__ = ["StreamBroken", "StreamDirectory", "StreamWriter", "StreamReader",
-           "chunk_key", "base_key", "chunk_count", "DEFAULT_CHUNK"]
+           "chunk_key", "base_key", "chunk_count", "is_chunk_key",
+           "DEFAULT_CHUNK"]
 
 DEFAULT_CHUNK = 1 << 18          # 256 KiB
 _PREFETCH_DEPTH = 32             # reader-side bounded chunk queue
@@ -56,8 +57,16 @@ def chunk_key(key: str, i: int) -> str:
 def base_key(key: str) -> str:
     """Inverse of :func:`chunk_key`: chunk key -> stream key (identity for
     plain keys).  Recovery uses this to map lost *chunk* records back to
-    the producer function that must re-run."""
+    the producer function that must re-run, and DShard's routing tables
+    use it so one installed route (the stream key's home) covers every
+    chunk of the stream — chunk keys are never routed individually."""
     return key.split(_CHUNK_SEP, 1)[0]
+
+
+def is_chunk_key(key: str) -> bool:
+    """True when ``key`` names one chunk of a stream (router/diagnostics
+    helper; avoids leaking the separator constant)."""
+    return _CHUNK_SEP in key
 
 
 def chunk_count(size: int, chunk_size: int = DEFAULT_CHUNK) -> int:

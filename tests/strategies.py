@@ -174,6 +174,29 @@ def external_inputs(wf: Workflow) -> dict:
     return {k: b"ext:" + k.encode() for k in wf.external_inputs}
 
 
+def sharded_run(seed: int, n_nodes: int, *, pattern: str = "dataflow",
+                stress: int | None = None):
+    """One engine run of ``random_workflow(seed)`` over a DShard
+    :class:`~repro.core.router.ShardedDStore` with its own trace recorder
+    (attached explicitly so the routing invariant is exercised even when
+    the conftest DFLOW_TRACE_CHECK fixture is off).  Returns
+    ``(outputs, store, events)`` — the caller asserts byte-equality
+    against the oracle/baseline and runs the TraceChecker."""
+    from repro.core.check import TraceRecorder
+    from repro.core.dscheduler import DFlowEngine
+    from repro.core.router import ShardedDStore
+
+    wf = random_workflow(seed)
+    eng = DFlowEngine(n_nodes=n_nodes, pattern=pattern, get_timeout=30.0,
+                      sharded=True)
+    store = ShardedDStore(eng.nodes, eng.transport)
+    rec = TraceRecorder(stress=stress)
+    store.attach_tracer(rec)
+    rep = eng.start(wf, external_inputs(wf), store=store).wait()
+    outputs = {k: bytes(v) for k, v in rep.outputs.items()}
+    return outputs, store, rec.events()
+
+
 if HAVE_HYPOTHESIS:
     @st.composite
     def workflows(draw, max_functions: int = 8):

@@ -11,9 +11,12 @@ absent) and a deterministic 200-seed sweep (marked ``slow``; CI's quick
 tier skips it, the full tier and local tier-1 runs execute it).
 """
 
+import os
+
 import pytest
 from conftest import given, settings, st                      # noqa: F401
-from strategies import external_inputs, oracle_run, random_workflow, workflows
+from strategies import (external_inputs, oracle_run, random_workflow,
+                        sharded_run, workflows)
 
 from repro.core.dscheduler import (DFlowEngine, dataflow_initial_frontier,
                                    dataflow_next_frontier)
@@ -97,6 +100,69 @@ def test_differential_controlflow_200(seed):
        pattern=st.sampled_from(["dataflow", "controlflow"]))
 def test_differential_hypothesis(seed, pattern):
     check_engine_matches_oracle(seed, pattern)
+
+
+# ----------------------------------------------------------------------
+# DShard: sharded store vs oracle AND vs the single-store baseline
+# ----------------------------------------------------------------------
+
+SHARD_NODES = (1, 2, 4)
+
+# Satellite contract: trace-clean under schedule stress — honour the same
+# env knob the conftest fixture uses so CI's DFLOW_TRACE_STRESS=7 pass
+# stresses the sharded runs too.
+_STRESS = int(os.environ.get("DFLOW_TRACE_STRESS", "0") or 0) or None
+
+
+def check_sharded_matches_baseline(seed, n_nodes):
+    """ShardedDStore run == oracle == single-store baseline, byte-exact;
+    the trace (incl. the 1-hop routing invariant) must be clean and no
+    Get may ever resolve in 2 hops."""
+    from repro.core.check import TraceChecker
+
+    oracle_wf = random_workflow(seed)
+    ext = external_inputs(oracle_wf)
+    expected = oracle_run(oracle_wf, ext)
+
+    baseline = DFlowEngine(n_nodes=2, get_timeout=30.0).run(
+        random_workflow(seed), ext)
+    base_out = {k: bytes(v) for k, v in baseline.outputs.items()}
+    assert base_out == expected, f"seed {seed} baseline vs oracle"
+
+    got, store, events = sharded_run(seed, n_nodes, stress=_STRESS)
+    assert got == expected, f"seed {seed} nodes {n_nodes} vs oracle"
+    assert got == base_out, f"seed {seed} nodes {n_nodes} vs single-store"
+    TraceChecker().check_or_raise(events)
+    bounces = sum(v for h, v in store.hop_hist.items() if h >= 2)
+    assert bounces == 0, (seed, n_nodes, dict(store.hop_hist))
+
+
+@pytest.mark.parametrize("n_nodes", SHARD_NODES)
+@pytest.mark.parametrize("seed", range(0, N_SEEDS, 20))
+def test_sharded_differential_quick(seed, n_nodes):
+    check_sharded_matches_baseline(seed, n_nodes)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("n_nodes", SHARD_NODES)
+@pytest.mark.parametrize("seed", range(N_SEEDS))
+def test_sharded_differential_200(seed, n_nodes):
+    check_sharded_matches_baseline(seed, n_nodes)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", range(0, N_SEEDS, 4))
+def test_sharded_controlflow_differential(seed):
+    """The sharded store is pattern-agnostic: controlflow invocation over
+    DShard is byte-exact too (routing never depends on launch order)."""
+    from repro.core.check import TraceChecker
+
+    oracle_wf = random_workflow(seed)
+    expected = oracle_run(oracle_wf, external_inputs(oracle_wf))
+    got, store, events = sharded_run(seed, 2, pattern="controlflow",
+                                     stress=_STRESS)
+    assert got == expected, seed
+    TraceChecker().check_or_raise(events)
 
 
 # ----------------------------------------------------------------------

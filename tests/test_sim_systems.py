@@ -20,16 +20,30 @@ def test_all_systems_complete_simple_benchmark():
 def test_dflow_beats_every_baseline_p99():
     """Paper Fig. 9: DFlow has the lowest 99%-ile latency everywhere.
 
-    ``dflow-stream`` is our beyond-paper extension, not a paper baseline —
-    it is allowed (expected, even) to beat plain dflow."""
+    ``dflow-stream`` and ``dflow-shard`` are our beyond-paper extensions,
+    not paper baselines — they are allowed (expected, even) to beat plain
+    dflow."""
     for bench in ["WC", "Gen", "Soy"]:
         wf = make_workflow(bench)
         p99 = {s: run_open_loop(s, wf, rate_per_min=6, n_invocations=5).p99
                for s in SYSTEMS}
         for s in SYSTEMS:
-            if s not in ("dflow", "dflow-stream"):
+            if s not in ("dflow", "dflow-stream", "dflow-shard"):
                 assert p99["dflow"] <= p99[s] + 1e-6, (bench, s, p99)
                 assert p99["dflow-stream"] <= p99[s] + 1e-6, (bench, s, p99)
+                assert p99["dflow-shard"] <= p99[s] + 1e-6, (bench, s, p99)
+
+
+def test_dflow_shard_p99_no_worse_than_dflow():
+    """DShard's routed 1-hop + tiered transports must never cost latency
+    vs the central-directory DStore (the ISSUE 8 acceptance criterion)."""
+    for bench in ["WC", "Gen", "Soy"]:
+        wf = make_workflow(bench)
+        shard = run_open_loop("dflow-shard", wf, rate_per_min=6,
+                              n_invocations=5).p99
+        plain = run_open_loop("dflow", wf, rate_per_min=6,
+                              n_invocations=5).p99
+        assert shard <= plain + 1e-6, (bench, shard, plain)
 
 
 def test_only_cflow_cyc_times_out_fig9():

@@ -400,3 +400,79 @@ def test_real_engine_streaming_beats_monolithic_wall_time():
     t_stream = wall(producer_stream, consumer_stream, True)
     t_mono = wall(producer_mono, consumer_mono, False)
     assert t_stream < t_mono
+
+
+# ----------------------------------------------------------------------
+# DShard: mid-stream node loss heals from the producing shard only
+# ----------------------------------------------------------------------
+
+def test_sharded_mid_stream_failure_heals_from_producing_shard():
+    """Sharded replay of the PR 2 recovery harness: two namespaced
+    instances stream through one shared ShardedDStore, the producer node
+    dies mid-stream (StreamBroken), and per-instance recovery re-runs only
+    the lost producers.  Healing touches the producing shard only — a
+    bystander shard's records are byte-for-byte untouched (no
+    directory-wide scan) — and every post-failure Get still resolves in
+    at most one hop (a failure re-home is not a misroute)."""
+    from repro.core.check import TraceChecker, TraceRecorder
+    from repro.core.router import ShardedDStore
+
+    calls: dict[str, int] = {}
+    lock = threading.Lock()
+
+    def mk_producer(inst):
+        def producer(seed):
+            with lock:
+                calls[inst] = calls.get(inst, 0) + 1
+
+            def gen():
+                for i in range(6):
+                    time.sleep(0.02)          # still emitting when node dies
+                    yield bytes(seed) * 128
+            return {"blob": gen()}
+        return producer
+
+    def consumer(blob):
+        return {"digest": b"".join(blob)}
+
+    eng = DFlowEngine(n_nodes=3, get_timeout=10.0, sharded=True)
+    store = ShardedDStore(eng.nodes, eng.transport)
+    rec = TraceRecorder()
+    store.attach_tracer(rec)
+    runs = []
+    for i in range(2):
+        wf = Workflow("mid", [
+            FunctionSpec("prod", ("seed",), ("blob",),
+                         fn=mk_producer(f"prod#{i}"), exec_time=0.12,
+                         stream_outputs=("blob",), chunk_size=128),
+            FunctionSpec("cons", ("blob",), ("digest",), fn=consumer,
+                         exec_time=0.01, stream_inputs=("blob",)),
+        ])
+        runs.append(eng.start(wf, {"seed": b"%d" % i}, store=store,
+                              instance=f"mid#{i}"))
+    prod_node = runs[0].placement["prod"]
+    used = set(runs[0].placement.values()) | set(runs[1].placement.values())
+    bystander = next(n for n in eng.nodes if n not in used)
+    store.put(bystander, "sentinel", b"innocent")     # homed on bystander
+
+    time.sleep(0.06)                          # both producers mid-emission
+    lost = store.fail_node(prod_node)
+    bys_keys = sorted(store.shards[bystander].keys())
+    for run in runs:
+        run.recover(lost)
+    for i, run in enumerate(runs):
+        rep = run.wait()
+        assert rep.outputs["digest"] == (b"%d" % i) * 6 * 128, i
+    assert all(1 <= calls[f"prod#{i}"] <= 3 for i in range(2)), calls
+
+    # Healing never scanned/mutated the bystander shard: same records,
+    # same replica locations, bytes still served from it.
+    assert sorted(store.shards[bystander].keys()) == bys_keys
+    meta = store.shards[bystander].peek("sentinel")
+    assert meta is not None and set(meta.locations) == {bystander}
+    assert store.get(prod_node, "sentinel", timeout=5.0) == b"innocent"
+
+    # 1-hop invariant held across the failure: no directory bounce, and
+    # the full trace (incl. routing events) is checker-clean.
+    assert store.hop_hist.get(2, 0) == 0, dict(store.hop_hist)
+    TraceChecker().check_or_raise(rec.events())
