@@ -1,0 +1,117 @@
+"""Bench regression gate: fresh runs vs the committed ``BENCH_*.json``.
+
+Every benchmark now emits the standardized ``dflow-bench/v1`` document
+(schema tag + a flat ``metrics`` list of ``{system, metric, value,
+direction, tolerance}`` rows).  This driver re-runs each benchmark with
+the *committed document's own config* (so the comparison is
+apples-to-apples even after a config change lands with new numbers),
+diffs fresh against committed via
+:func:`repro.core.obs.compare_docs`, and **exits 1 when any gated
+metric regresses beyond its tolerance** (default 10% — the ">10% p99"
+CI gate) or a committed metric vanishes from the fresh run.
+
+Committed baselines are never overwritten — refresh them by running the
+individual benchmark modules.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_compare \
+          [--only dcheck,obs] [--fast]
+"""
+
+import argparse
+import json
+import sys
+
+from repro.core.obs import compare_docs
+
+from . import dcheck_overhead, dplan_overhead, dshard_routing, obs_overhead
+
+
+def _regen_dcheck(config, repeats):
+    return dcheck_overhead.measure(config, repeats=repeats)
+
+
+def _regen_dplan(config, repeats):
+    return dplan_overhead.measure(config, repeats=repeats)
+
+
+def _regen_obs(config, repeats):
+    doc, _spans = obs_overhead.measure(config, repeats=repeats)
+    return doc
+
+
+def _regen_dshard(config, repeats):
+    cfg = {k: v for k, v in config.items() if k != "nodes"}
+    cfg["repeats"] = repeats
+    return dshard_routing.measure(n_nodes=config["nodes"], cfg=cfg)
+
+
+# name -> (committed baseline path, regenerator)
+BENCHES = {
+    "dcheck": ("BENCH_dcheck.json", _regen_dcheck),
+    "dplan": ("BENCH_dplan.json", _regen_dplan),
+    "dshard": ("BENCH_dshard.json", _regen_dshard),
+    "obs": ("BENCH_obs.json", _regen_obs),
+}
+
+
+def compare_one(name, *, fast=False, tolerance=0.10):
+    """Returns (rows, failures) for one bench; failures non-empty on
+    regression, schema mismatch, or unreadable baseline."""
+    path, regen = BENCHES[name]
+    try:
+        with open(path, "r", encoding="utf-8") as fh:
+            old = json.load(fh)
+    except (OSError, ValueError) as exc:
+        return [], [f"{name}: cannot read baseline {path!r}: {exc}"]
+    if old.get("schema") != "dflow-bench/v1":
+        return [], [f"{name}: baseline {path!r} lacks the dflow-bench/v1 "
+                    "schema tag — regenerate it"]
+    config = dict(old.get("config", {}))
+    repeats = int(old.get("repeats", config.get("repeats", 3)))
+    if fast:
+        repeats = min(repeats, 2)
+    new = regen(config, repeats)
+    return compare_docs(old, new, default_tolerance=tolerance)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", metavar="NAMES",
+                    help="comma-separated subset of "
+                    + ",".join(BENCHES))
+    ap.add_argument("--fast", action="store_true",
+                    help="cap repeats at 2 (CI quick tier)")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="default relative tolerance for gated metrics "
+                    "without an explicit one (default 0.10)")
+    args = ap.parse_args(argv)
+    names = (args.only.split(",") if args.only else list(BENCHES))
+    for n in names:
+        if n not in BENCHES:
+            ap.error(f"unknown bench {n!r}; choose from {list(BENCHES)}")
+
+    all_failures = []
+    for name in names:
+        rows, failures = compare_one(name, fast=args.fast,
+                                     tolerance=args.tolerance)
+        gated = sum(r["gated"] for r in rows)
+        print(f"== {name}: {len(rows)} metric(s), {gated} gated, "
+              f"{len(failures)} failure(s)")
+        for r in rows:
+            flag = ("REGRESSED" if r["regressed"]
+                    else (r["direction"] or "report"))
+            print(f"   {r['system']:10s} {r['metric']:26s} "
+                  f"{r['old']:10.4g} -> {r['new']:10.4g} "
+                  f"{r['rel']:+8.1%}  {flag}")
+        all_failures += [f"{name}: {f}" for f in failures]
+    if all_failures:
+        print(f"\n{len(all_failures)} regression(s):", file=sys.stderr)
+        for f in all_failures:
+            print(f"  REGRESSION: {f}", file=sys.stderr)
+        return 1
+    print("\n# all gated metrics within tolerance of committed baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -22,6 +22,7 @@ import json
 import time
 
 from repro.core.check import TraceChecker, TraceRecorder
+from repro.core.obs import bench_doc, bench_metric
 from repro.core.serve import DServe, poisson_arrivals
 from repro.core.workloads import serving_chain
 
@@ -58,25 +59,35 @@ def measure(cfg=SMOKE, repeats: int = 3):
     violations = TraceChecker().check(rec.events())
     check_s = time.perf_counter() - t0
     assert not violations, [str(v) for v in violations]
-    return {
-        "bench": "dcheck_overhead",
-        "config": dict(cfg),
-        "repeats": repeats,
-        "checker_off": {"p50_s": round(off.p50, 4),
-                        "p99_s": round(off.p99, 4),
-                        "wall_s": round(off.wall_time, 4)},
-        "checker_on": {"p50_s": round(on.p50, 4),
-                       "p99_s": round(on.p99, 4),
-                       "wall_s": round(on.wall_time, 4),
-                       "events": len(rec)},
-        "overhead": {
-            "p99_ratio": round(on.p99 / max(off.p99, 1e-9), 3),
-            "wall_ratio": round(on.wall_time / max(off.wall_time, 1e-9), 3),
-        },
-        "offline_check": {"events": len(rec),
-                          "check_s": round(check_s, 5),
-                          "violations": 0},
-    }
+    p99_ratio = round(on.p99 / max(off.p99, 1e-9), 3)
+    wall_ratio = round(on.wall_time / max(off.wall_time, 1e-9), 3)
+    # Standardized dflow-bench/v1 rows.  Ratios are gated (lower is
+    # better; noise-relative, so they survive shared runners); absolute
+    # wall-clock latencies are report-only.
+    metrics = [
+        bench_metric("dcheck", "p99_ratio", p99_ratio, "x",
+                     direction="lower"),
+        bench_metric("dcheck", "wall_ratio", wall_ratio, "x",
+                     direction="lower"),
+        bench_metric("dcheck", "p99_on_s", round(on.p99, 4), "s"),
+        bench_metric("dcheck", "p99_off_s", round(off.p99, 4), "s"),
+        bench_metric("dcheck", "offline_check_s", round(check_s, 5), "s"),
+    ]
+    return bench_doc(
+        "dcheck_overhead", cfg, metrics,
+        repeats=repeats,
+        checker_off={"p50_s": round(off.p50, 4),
+                     "p99_s": round(off.p99, 4),
+                     "wall_s": round(off.wall_time, 4)},
+        checker_on={"p50_s": round(on.p50, 4),
+                    "p99_s": round(on.p99, 4),
+                    "wall_s": round(on.wall_time, 4),
+                    "events": len(rec)},
+        overhead={"p99_ratio": p99_ratio, "wall_ratio": wall_ratio},
+        offline_check={"events": len(rec),
+                       "check_s": round(check_s, 5),
+                       "violations": 0},
+    )
 
 
 def main(argv=None) -> int:

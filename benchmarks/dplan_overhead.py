@@ -27,6 +27,7 @@ import json
 import time
 
 from repro.core.check import PlanConformance, TraceRecorder
+from repro.core.obs import bench_doc, bench_metric
 from repro.core.partition import partition_workflow
 from repro.core.plan import build_plan
 from repro.core.serve import DServe, poisson_arrivals
@@ -86,22 +87,36 @@ def measure(cfg=SMOKE, repeats: int = 3):
                 "container_seconds": round(rep.container_seconds, 3),
                 "peak_resident_bytes": rep.peak_resident_bytes}
 
-    return {
-        "bench": "dplan_overhead",
-        "config": dict(cfg),
-        "repeats": repeats,
-        "plan_build": plan_build_times(),
-        "heuristic": row(heur),
-        "plan_driven": row(planned),
-        "delta": {
-            "peak_resident_ratio": round(
-                planned.peak_resident_bytes
-                / max(heur.peak_resident_bytes, 1), 3),
-            "p99_ratio": round(planned.p99 / max(heur.p99, 1e-9), 3),
-            "cold_starts": planned.cold_starts - heur.cold_starts,
-        },
-        "conformance": {"events": len(rec), "violations": 0},
+    builds = plan_build_times()
+    delta = {
+        "peak_resident_ratio": round(
+            planned.peak_resident_bytes
+            / max(heur.peak_resident_bytes, 1), 3),
+        "p99_ratio": round(planned.p99 / max(heur.p99, 1e-9), 3),
+        "cold_starts": planned.cold_starts - heur.cold_starts,
     }
+    # peak_resident_ratio is the plan's headline win (deterministic byte
+    # accounting, 9x headroom to the <1.0 assert) — gated with a loose
+    # tolerance.  p99_ratio rides thread-scheduling noise, report-only.
+    metrics = [
+        bench_metric("dplan", "peak_resident_ratio",
+                     delta["peak_resident_ratio"], "x",
+                     direction="lower", tolerance=1.0),
+        bench_metric("dplan", "p99_ratio", delta["p99_ratio"], "x"),
+        bench_metric("dplan", "request_cold_starts",
+                     planned.cold_starts, "boots"),
+        bench_metric("dplan", "build_us_worst",
+                     max(b["build_us"] for b in builds.values()), "us"),
+    ]
+    return bench_doc(
+        "dplan_overhead", cfg, metrics,
+        repeats=repeats,
+        plan_build=builds,
+        heuristic=row(heur),
+        plan_driven=row(planned),
+        delta=delta,
+        conformance={"events": len(rec), "violations": 0},
+    )
 
 
 def main(argv=None) -> int:

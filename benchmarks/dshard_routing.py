@@ -27,6 +27,9 @@ import argparse
 import json
 
 from repro.core import make_workflow, run_open_loop
+from repro.core.obs import (MetricsRegistry, Tracer, bench_doc,
+                            bench_metric, plan_attribution,
+                            write_spans_jsonl)
 from repro.core.router import TIER_IPC, TIER_MEM, TIER_NET, TieredTransport
 from repro.core.serve import DServe, poisson_arrivals
 from repro.core.workloads import serving_chain, serving_fanout
@@ -119,12 +122,51 @@ def measure(*, n_nodes, cfg):
                                      rate=cfg["rate"], n=cfg["n"],
                                      repeats=cfg["repeats"])
                for name, mk in sorted(_serve_workloads().items())}
-    return {
-        "bench": "dshard_routing",
-        "config": {"nodes": n_nodes, **cfg},
-        "serving": serving,
-        "sim_p99": measure_sim(sim_invocations=cfg["sim_invocations"]),
-    }
+    sim = measure_sim(sim_invocations=cfg["sim_invocations"])
+    # Standardized rows.  Gated: 1-hop fraction (higher), 2-hop count
+    # (lower — committed 0, so ANY misroute fails) and the deterministic
+    # sim p99 ratios (lower).  Threaded p99 ratios are report-only.
+    metrics = []
+    for name, row in sorted(serving.items()):
+        metrics += [
+            bench_metric(name, "one_hop_fraction",
+                         row["one_hop_fraction"], "frac",
+                         direction="higher", tolerance=0.05),
+            bench_metric(name, "two_hop_gets",
+                         row["hop_hist"].get(2, 0), "gets",
+                         direction="lower"),
+            bench_metric(name, "p99_ratio_vs_single",
+                         row["p99_ratio"], "x"),
+            bench_metric(name, "cross_node_bytes",
+                         row["cross_node_bytes"], "B"),
+        ]
+    for bench, row in sorted(sim.items()):
+        metrics.append(bench_metric(f"sim/{bench}", "p99_shard_ratio",
+                                    row["ratio"], "x", direction="lower"))
+    return bench_doc("dshard_routing", {"nodes": n_nodes, **cfg}, metrics,
+                     serving=serving, sim_p99=sim)
+
+
+def traced_run(out: str, *, n_nodes, rate, n):
+    """One sharded plan-driven Srv run with DScope spans attached —
+    includes the cross-shard ``hop`` spans nested under their Gets.
+    Separate from the timed runs so tracing never perturbs them."""
+    spans, metrics = Tracer(), MetricsRegistry()
+    srv = DServe(serving_chain(stages=4, exec_time=0.03, cold_start=0.15,
+                               payload=16 * 1024),
+                 n_nodes=n_nodes, pattern="dataflow", keepalive=10.0,
+                 max_per_node=16, transport=TieredTransport(),
+                 sharded=True, plan=True, spans=spans, metrics=metrics)
+    rep = srv.run(poisson_arrivals(rate, n, seed=7),
+                  inputs={"request": b"req"})
+    assert rep.failures == 0, "traced run failed"
+    hops = sum(1 for s in spans.finished() if s.kind == "hop")
+    write_spans_jsonl(spans.finished(), out,
+                      plan=plan_attribution(srv.plan),
+                      meta={"bench": "dshard_routing", "nodes": n_nodes,
+                            "rate": rate, "n": n, "hop_spans": hops})
+    print(f"# wrote {len(spans.finished())} span(s) ({hops} hop(s)) to "
+          f"{out} (inspect: python -m repro.obs summarize {out} --tree 1)")
 
 
 def main(argv=None) -> int:
@@ -134,8 +176,13 @@ def main(argv=None) -> int:
     ap.add_argument("--nodes", type=int, default=4)
     ap.add_argument("--smoke", action="store_true",
                     help="small/fast configuration (CI)")
+    ap.add_argument("--spans", metavar="FILE",
+                    help="also run one sharded plan-driven pass with "
+                    "DScope spans attached (hop spans included) and "
+                    "write them to FILE")
     args = ap.parse_args(argv)
-    doc = measure(n_nodes=args.nodes, cfg=SMOKE if args.smoke else FULL)
+    cfg = SMOKE if args.smoke else FULL
+    doc = measure(n_nodes=args.nodes, cfg=cfg)
     with open(args.out, "w", encoding="utf-8") as fh:
         json.dump(doc, fh, indent=2)
         fh.write("\n")
@@ -158,6 +205,9 @@ def main(argv=None) -> int:
     print(f"# sim p99 (dflow-shard vs dflow, Fig. 9 point): worst ratio "
           f"{worst:.3f} over {', '.join(SIM_BENCHES)} — sharding never "
           "costs tail latency")
+    if args.spans:
+        traced_run(args.spans, n_nodes=args.nodes, rate=cfg["rate"],
+                   n=cfg["n"])
     return 0
 
 

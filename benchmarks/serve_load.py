@@ -13,6 +13,8 @@ Run:  PYTHONPATH=src python -m benchmarks.serve_load [--smoke]
 
 import argparse
 
+from repro.core.obs import (MetricsRegistry, Tracer, plan_attribution,
+                            write_spans_jsonl)
 from repro.core.serve import DServe, poisson_arrivals
 from repro.core.workloads import serving_chain
 
@@ -69,6 +71,28 @@ def run():
     return rows
 
 
+def traced_run(out: str, *, rate: float, n: int, stages: int,
+               exec_time: float, cold_start: float):
+    """One plan-driven dataflow run with DScope spans attached, written
+    as JSONL with the plan attribution document embedded — the input to
+    ``python -m repro.obs summarize/attribute/perfetto``.  Runs separate
+    from the timed sweep so tracing never perturbs the bench numbers."""
+    wf = serving_chain(stages=stages, exec_time=exec_time,
+                       cold_start=cold_start, payload=16 * 1024)
+    spans, metrics = Tracer(), MetricsRegistry()
+    srv = DServe(wf, n_nodes=2, pattern="dataflow", keepalive=10.0,
+                 max_per_node=16, plan=True, spans=spans, metrics=metrics)
+    rep = srv.run(poisson_arrivals(rate, n, seed=7),
+                  inputs={"request": b"req"})
+    assert rep.failures == 0, "traced run failed"
+    write_spans_jsonl(spans.finished(), out,
+                      plan=plan_attribution(srv.plan),
+                      meta={"bench": "serve_load", "rate": rate, "n": n,
+                            "p99_s": round(rep.p99, 4)})
+    print(f"# wrote {len(spans.finished())} span(s) to {out} "
+          f"(inspect: python -m repro.obs summarize {out} --tree 1)")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -76,6 +100,10 @@ def main(argv=None) -> int:
     ap.add_argument("--plan", action="store_true",
                     help="add the plan-driven dataflow arm (DPlan "
                     "eviction + slack prewarm; asserted under --smoke)")
+    ap.add_argument("--spans", metavar="FILE",
+                    help="also run one plan-driven dataflow pass with "
+                    "DScope spans attached and write them (JSONL, plan "
+                    "attribution embedded) to FILE")
     args = ap.parse_args(argv)
     cfg = SMOKE if args.smoke else FULL
     patterns = ("controlflow", "dataflow") + (
@@ -116,6 +144,10 @@ def main(argv=None) -> int:
             print(f"# plan smoke ok: peak resident "
                   f"{dp.peak_resident_bytes} B < {df.peak_resident_bytes} "
                   f"B at p99 {dp.p99:.3f}s (heuristic {df.p99:.3f}s)")
+    if args.spans:
+        traced_run(args.spans, rate=cfg["rates"][0], n=cfg["n"],
+                   stages=cfg["stages"], exec_time=cfg["exec_time"],
+                   cold_start=cfg["cold_start"])
     return 0
 
 

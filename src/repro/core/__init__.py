@@ -21,6 +21,10 @@ Layers:
   DF diagnostic codes; ``python -m repro.lint`` CLI).
 * :mod:`repro.core.check`        — DCheck dynamic invariant checker
   (trace recording + offline happens-before/immutability validation).
+* :mod:`repro.core.obs`          — DScope observability: MetricsRegistry,
+  per-request span Tracer (JSONL/Perfetto exporters), plan-vs-actual
+  attribution, and the standardized ``dflow-bench/v1`` schema
+  (``python -m repro.obs`` CLI).
 """
 
 from .check import (TraceChecker, TraceEvent, TraceRecorder, Violation,
@@ -32,6 +36,9 @@ from .dstore import (DStore, DataDirectoryService, ImmutabilityError,
                      LocalStore, Transport)
 from .lint import (Diagnostic, WorkflowLintError, check_workflow, lint,
                    lint_workflow)
+from .obs import (MetricsRegistry, Span, Tracer, attribute,
+                  bench_doc, bench_metric, compare_docs, plan_attribution,
+                  read_spans_jsonl, to_chrome_trace, write_spans_jsonl)
 from .experiments import (ExperimentResult, cold_start_latency,
                           percentile, run_closed_loop, run_open_loop)
 from .partition import cut_bytes, partition_workflow, stage_node
@@ -63,4 +70,7 @@ __all__ = [
     "routes_from_plan", "static_routes",
     "SYSTEMS", "make_system", "SimConfig",
     "BENCHMARKS", "make_workflow",
+    "MetricsRegistry", "Span", "Tracer", "attribute",
+    "bench_doc", "bench_metric", "compare_docs", "plan_attribution",
+    "read_spans_jsonl", "to_chrome_trace", "write_spans_jsonl",
 ]

@@ -165,6 +165,14 @@ class TraceRecorder:
             time.sleep(delay)
         return ev
 
+    def tick(self) -> int:
+        """Advance and return the logical clock without recording an
+        event — lets DScope spans share this ordering domain so span
+        ``seq`` values interleave consistently with trace events."""
+        with self._lock:
+            self._clock += 1
+            return self._clock
+
     def events(self) -> list[TraceEvent]:
         with self._lock:
             return list(self._events)

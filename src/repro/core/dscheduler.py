@@ -33,8 +33,10 @@ the paper's §3.3.5 restarts the whole workflow).
 
 from __future__ import annotations
 
+import math
 import threading
 import time
+from contextlib import nullcontext
 from dataclasses import dataclass, field
 from typing import Any, Mapping
 
@@ -122,7 +124,7 @@ class InstanceRun:
                  store: DStore | None = None, instance: str | None = None,
                  placement: dict[str, str] | None = None,
                  inject_failure: str | None = None,
-                 plan=None):
+                 plan=None, spans=None):
         self.engine = engine
         self.wf = wf
         self.inputs = dict(inputs or {})
@@ -146,6 +148,14 @@ class InstanceRun:
             raise ValueError("plan-driven eviction cannot be combined with "
                              "straggler duplicates or failure injection")
         self.plan = plan
+        # DScope span tracer (obs.py), zero-cost when None.  A shared
+        # store is instrumented by the first instance that carries one.
+        self.spans = spans if spans is not None else engine.spans
+        self._span = None
+        self._invoke_spans: list[Any] = []
+        if self.spans is not None and \
+                getattr(self.store, "_spans", None) is None:
+            self.store.attach_spans(self.spans)
         self._prewarm_timers: list[threading.Timer] = []
         self.state = _InstanceState(wf)
         self.report = RunReport(outputs={}, wall_time=0.0)
@@ -184,10 +194,17 @@ class InstanceRun:
         register = getattr(store, "register_instance", None)
         if register is not None:
             register(self._ns, wf, placement, plan=self.plan)
-        for k, v in self.inputs.items():
-            # Stage external inputs on the node of each first consumer.
-            node = stage_node(wf, k, placement, self.engine.nodes[0])
-            store.put(node, self.ns(k), v)
+        if self.spans is not None:
+            trace = self.instance or wf.name
+            self._span = self.spans.start(trace, "request", parent=None,
+                                          trace=trace, workflow=wf.name)
+        # Staging Puts run under the request span so their spans nest.
+        with self.spans.activate(self._span) if self.spans is not None \
+                else nullcontext():
+            for k, v in self.inputs.items():
+                # Stage external inputs on the node of each first consumer.
+                node = stage_node(wf, k, placement, self.engine.nodes[0])
+                store.put(node, self.ns(k), v)
         if self.plan is not None:
             store.set_plan_reads(self._ns, self.plan.eviction_reads)
             self._arm_prewarm()
@@ -220,6 +237,34 @@ class InstanceRun:
 
     def wait(self, timeout: float | None = None) -> RunReport:
         """Block until the instance completes; returns the report."""
+        if self.spans is None:
+            return self._wait_inner(timeout)
+        try:
+            # Sink-collection Gets below run under the request span; the
+            # span closes once the instance's outcome is known.
+            with self.spans.activate(self._span):
+                report = self._wait_inner(timeout)
+        except BaseException as exc:
+            self._drain_invoke_spans()
+            self.spans.end(self._span, error=type(exc).__name__)
+            raise
+        self._drain_invoke_spans()
+        self.spans.end(self._span, ok=True)
+        return report
+
+    def _drain_invoke_spans(self, timeout: float = 2.0) -> None:
+        """Worker threads close their invoke spans in a ``finally`` that can
+        run just *after* the last ``mark_done`` unblocks :meth:`wait`; hold
+        the request span open until they land so it contains its children
+        (bounded — a failed instance may leave threads blocked on Gets)."""
+        deadline = time.monotonic() + timeout
+        with self.state.lock:
+            pending = list(self._invoke_spans)
+        for sp in pending:
+            while math.isnan(sp.end) and time.monotonic() < deadline:
+                time.sleep(0.0005)
+
+    def _wait_inner(self, timeout: float | None = None) -> RunReport:
         state, wf = self.state, self.wf
         state.all_done.wait(timeout=timeout if timeout is not None
                             else self.engine.get_timeout * 2)
@@ -295,6 +340,40 @@ class InstanceRun:
 
     def _execute(self, fname: str, node: str, *,
                  duplicate: bool = False) -> None:
+        spans = self.spans
+        if spans is None:
+            return self._execute_inner(fname, node, duplicate=duplicate)
+        # Function threads don't inherit thread-local context: the invoke
+        # span is parented on the request span explicitly, then activated
+        # so this thread's Gets/Puts (and stream pumps) nest under it.
+        sp = spans.start(fname, "invoke", parent=self._span, node=node,
+                         duplicate=duplicate)
+        if not duplicate:
+            with self.state.lock:
+                self._invoke_spans.append(sp)
+        try:
+            with spans.activate(sp):
+                return self._execute_inner(fname, node, duplicate=duplicate)
+        finally:
+            spans.end(sp)
+
+    def _acquire(self, node: str, fname: str, cold_start: float) -> bool:
+        """Container acquire, span-wrapped (the ``cold`` attribute is what
+        plan-vs-actual attribution reads for prewarm accuracy)."""
+        containers, spans = self.engine.containers, self.spans
+        if spans is None:
+            return containers.acquire(node, self.image(fname), cold_start)
+        sp = spans.start(fname, "acquire", node=node)
+        try:
+            cold = containers.acquire(node, self.image(fname), cold_start)
+        except BaseException:
+            spans.end(sp, error=True)
+            raise
+        spans.end(sp, cold=cold)
+        return cold
+
+    def _execute_inner(self, fname: str, node: str, *,
+                       duplicate: bool = False) -> None:
         state, wf, engine = self.state, self.wf, self.engine
         f = wf.functions[fname]
         containers = engine.containers
@@ -305,8 +384,7 @@ class InstanceRun:
                 # Container acquire happens at launch time — before the
                 # input fetches below block — so a cold boot overlaps the
                 # precursor's execution under the dataflow pattern.
-                cold = containers.acquire(node, self.image(fname),
-                                          f.cold_start)
+                cold = self._acquire(node, fname, f.cold_start)
                 leased = True
                 if cold:
                     with state.lock:
@@ -323,8 +401,7 @@ class InstanceRun:
                         # so the container is not leased during the input
                         # wait and the slack-timed prewarm (armed at
                         # start()) has it booted by now.
-                        cold = containers.acquire(node, self.image(fname),
-                                                  f.cold_start)
+                        cold = self._acquire(node, fname, f.cold_start)
                         leased = True
                         if cold:
                             with state.lock:
@@ -482,7 +559,8 @@ class DFlowEngine:
                  get_timeout: float = 120.0,
                  straggler_factor: float | None = None,
                  containers=None, prewarm: bool = True,
-                 lint: bool = True, sharded: bool = False):
+                 lint: bool = True, sharded: bool = False,
+                 spans=None):
         if pattern not in ("dataflow", "controlflow"):
             raise ValueError(pattern)
         self.nodes = [f"node{i}" for i in range(n_nodes)]
@@ -495,13 +573,16 @@ class DFlowEngine:
         self.prewarm = prewarm
         self.lint = lint
         self.sharded = sharded
+        # DScope span tracer (obs.py): every instance launched through
+        # this engine inherits it unless it brings its own.
+        self.spans = spans
 
     # ------------------------------------------------------------------
     def start(self, wf: Workflow, inputs: Mapping[str, Any] | None = None,
               *, store: DStore | None = None, instance: str | None = None,
               placement: dict[str, str] | None = None,
               inject_failure: str | None = None,
-              plan=None) -> InstanceRun:
+              plan=None, spans=None) -> InstanceRun:
         """Launch one instance and return its handle (non-blocking) —
         the entry point serving layers use to run many instances
         concurrently over a shared ``store``."""
@@ -515,7 +596,8 @@ class DFlowEngine:
             check_workflow(wf, require_fns=True)
         return InstanceRun(self, wf, inputs, store=store, instance=instance,
                            placement=placement,
-                           inject_failure=inject_failure, plan=plan).start()
+                           inject_failure=inject_failure, plan=plan,
+                           spans=spans).start()
 
     def run(self, wf: Workflow, inputs: Mapping[str, Any] | None = None,
             *, inject_failure: str | None = None,

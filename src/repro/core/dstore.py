@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import threading
 import time
+from contextlib import nullcontext
 from dataclasses import dataclass, field
 from typing import Any, Callable, Mapping
 
@@ -49,7 +50,7 @@ class ImmutabilityError(ValueError):
 # stream.py lazily imports GetTimeout, so this import must come after it.
 from .check import TraceRecorder, content_digest  # noqa: E402
 from .stream import (DEFAULT_CHUNK, StreamDirectory, StreamReader,  # noqa: E402
-                     StreamWriter, chunk_key)
+                     StreamWriter, chunk_key, is_chunk_key)
 
 
 # Imported at module load, not inside _sizeof: a lazy import there put a
@@ -72,6 +73,18 @@ def _sizeof(value: Any) -> int:
     except Exception:  # pragma: no cover - best effort sizing
         pass
     return 64  # opaque object: metadata-only size
+
+
+# nullcontext is reentrant and stateless, so one shared instance serves
+# every un-instrumented Get.
+_NULL_CTX = nullcontext()
+
+
+def _trace_of(key: str) -> str:
+    """Instance id from a ``#``-namespaced key (``wf#0:out`` → ``wf#0``),
+    used to tag spans emitted outside any request context (evictions)."""
+    head, sep, _ = key.partition(":")
+    return head if sep and "#" in head else ""
 
 
 @dataclass
@@ -277,6 +290,11 @@ class DStore:
         self._write_lock = threading.Lock()
         # DCheck hook (see check.py): None = recording off, zero cost.
         self._tracer: TraceRecorder | None = None
+        # DScope hooks (see obs.py), same zero-cost-when-off pattern:
+        # _spans is a Tracer producing per-request span trees, _metrics a
+        # MetricsRegistry receiving hot-path latency observations.
+        self._spans = None
+        self._metrics = None
         # DPlan eviction hints: key -> Gets remaining before the key is
         # provably dead (installed per instance by set_plan_reads).  Own
         # lock so the countdown never nests inside _write_lock.
@@ -291,6 +309,37 @@ class DStore:
         self._tracer = tracer
         self.streams.tracer = tracer
 
+    def attach_spans(self, spans) -> None:
+        """Attach (or detach, with None) a DScope span
+        :class:`~repro.core.obs.Tracer`.  Every Get/Put/chunk/evict from
+        then on emits a span parented under the calling thread's active
+        span (the function-invocation span the engine activated)."""
+        self._spans = spans
+
+    def attach_metrics(self, registry) -> None:
+        """Attach a :class:`~repro.core.obs.MetricsRegistry` for hot-path
+        latency histograms (per-Get/Put) *and* register the pull
+        collectors.  Passing None detaches the push hooks."""
+        self._metrics = registry
+        if registry is not None:
+            self.register_metrics(registry)
+
+    def register_metrics(self, registry) -> None:
+        """Register pull-style collectors only (no hot-path cost): per-node
+        resident/peak bytes and transport traffic, scraped at
+        ``registry.collect()`` time."""
+        def _scrape() -> None:
+            for node, s in self.stores.items():
+                registry.gauge("dstore_resident_bytes",
+                               node=node).set(s.resident_bytes)
+                registry.gauge("dstore_peak_resident_bytes",
+                               node=node).set(s.peak_bytes)
+            registry.counter("transport_bytes_moved").set(
+                self.transport.bytes_moved)
+            registry.counter("transport_transfers").set(
+                self.transport.transfers)
+        registry.register_collector(_scrape)
+
     # -- Table 1 core API ------------------------------------------------
     def put(self, node: str, key: str, value: Any) -> None:
         """Create data with the given key (immutable; §3.3).
@@ -301,6 +350,16 @@ class DStore:
         :class:`ImmutabilityError` instead of silently registering a second
         replica with different bytes.
         """
+        spans = self._spans
+        if spans is None:
+            return self._put(node, key, value)
+        sp = spans.start(key, "put", node=node, size=_sizeof(value))
+        try:
+            return self._put(node, key, value)
+        finally:
+            spans.end(sp)
+
+    def _put(self, node: str, key: str, value: Any) -> None:
         store = self.stores[node]
         digest = content_digest(value)
         tracer = self._tracer
@@ -334,6 +393,32 @@ class DStore:
         directory record points at a wiped store) is dropped and the wait
         restarts — recovery re-publishes the key and wakes us again.
         """
+        spans = self._spans
+        metrics = self._metrics
+        if spans is None and metrics is None:
+            return self._get_recorded(node, key, timeout)
+        t0 = time.monotonic()
+        sp = None
+        if spans is not None:
+            sp = spans.start(key, "chunk" if is_chunk_key(key) else "get",
+                             node=node)
+        try:
+            # Activated so cross-shard hop spans nest under this Get.
+            with spans.activate(sp) if spans is not None else _NULL_CTX:
+                value = self._get_recorded(node, key, timeout)
+        except BaseException:
+            if sp is not None:
+                spans.end(sp, error=True)
+            raise
+        if sp is not None:
+            spans.end(sp, size=_sizeof(value))
+        if metrics is not None:
+            metrics.histogram("dstore_get_seconds").observe(
+                time.monotonic() - t0)
+        return value
+
+    def _get_recorded(self, node: str, key: str,
+                      timeout: float | None = None) -> Any:
         tracer = self._tracer
         if tracer is None:
             value = self._get(node, key, timeout)
@@ -411,6 +496,18 @@ class DStore:
         """One stream chunk: bytes in the local store, a directory record
         of its own (so remote pulls are chunk-granular and receiver-driven),
         and a stream-directory publish that wakes blocked readers."""
+        spans = self._spans
+        if spans is None:
+            return self._put_chunk(node, key, idx, chunk)
+        sp = spans.start(chunk_key(key, idx), "chunk_put", node=node,
+                         size=len(chunk))
+        try:
+            return self._put_chunk(node, key, idx, chunk)
+        finally:
+            spans.end(sp)
+
+    def _put_chunk(self, node: str, key: str, idx: int,
+                   chunk: bytes) -> None:
         ck = chunk_key(key, idx)
         digest = content_digest(chunk)
         with self._write_lock:
@@ -454,12 +551,15 @@ class DStore:
         directory record.  Safe exactly when no future Get of the key can
         exist — which is what the plan's liveness analysis proves."""
         with self._write_lock:
-            if self._tracer is not None and \
-                    self.directory.peek(key) is not None:
+            existed = self.directory.peek(key) is not None
+            if self._tracer is not None and existed:
                 self._tracer.record("evict", key)
             for store in self.stores.values():
                 store.drop_key(key)
             self.directory.drop([key])
+        if existed and self._spans is not None:
+            self._spans.event(key, "evict", parent=None,
+                              trace=_trace_of(key))
 
     def resident_bytes(self) -> int:
         """Bytes currently held across all node-local stores."""
@@ -493,17 +593,24 @@ class DStore:
         stores, directory records, and stream records (chunk keys share the
         instance prefix, so they are swept by the same pass).  Bounded
         memory under sustained multi-instance serving."""
+        swept: list[str] = []
         with self._write_lock:
-            if self._tracer is not None:
+            if self._tracer is not None or self._spans is not None:
                 # Recorded before the bytes are reclaimed: an in-flight
                 # reader recorded earlier is a real use-after-evict hazard.
                 for k in self.directory.keys():
                     if k.startswith(prefix):
-                        self._tracer.record("evict", k)
+                        if self._tracer is not None:
+                            self._tracer.record("evict", k)
+                        swept.append(k)
             for store in self.stores.values():
                 store.drop_prefix(prefix)
             self.directory.drop_prefix(prefix)
         self.streams.evict_prefix(prefix)
+        if self._spans is not None:
+            for k in swept:
+                self._spans.event(k, "evict", parent=None,
+                                  trace=_trace_of(k))
         if self._plan_reads:
             with self._plan_lock:
                 for k in [k for k in self._plan_reads

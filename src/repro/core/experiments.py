@@ -92,14 +92,21 @@ def run_open_loop(system: str, wf: Workflow, *, rate_per_min: float,
                   n_invocations: int = 30,
                   cfg: SimConfig | None = None,
                   warm: bool = True,
-                  poisson_seed: int | None = None) -> ExperimentResult:
+                  poisson_seed: int | None = None,
+                  spans=None) -> ExperimentResult:
     """Fire ``n_invocations`` at fixed inter-arrival 60/rate seconds, or —
     with ``poisson_seed`` — at deterministic Poisson arrivals of the same
-    mean rate (the serving layer's open-loop arrival process)."""
+    mean rate (the serving layer's open-loop arrival process).
+
+    ``spans``: a DScope :class:`~repro.core.obs.Tracer` — rebound to the
+    virtual clock — records request/invoke/acquire spans with ``env.now``
+    durations (the warm throwaway's spans are cleared)."""
     cfg = cfg or SimConfig()
     env = Env()
+    if spans is not None:
+        spans.set_clock(lambda: env.now)
     cluster = Cluster(env, cfg)
-    sys_ = make_system(system, env, cluster, wf)
+    sys_ = make_system(system, env, cluster, wf, spans=spans)
     gap = 60.0 / rate_per_min
     if poisson_seed is None:
         gaps = [gap] * n_invocations
@@ -116,6 +123,8 @@ def run_open_loop(system: str, wf: Workflow, *, rate_per_min: float,
         sys_.results.clear()
         cluster.network.log.clear()
         cluster.network.busy_time = 0.0
+        if spans is not None:
+            spans.clear()
 
     def driver():
         for g in gaps:

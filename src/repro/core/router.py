@@ -45,7 +45,7 @@ import time
 from typing import TYPE_CHECKING, Iterable, Mapping
 
 from .dstore import (DStore, DataDirectoryService, GetTimeout,
-                     ImmutabilityError, Transport, _sizeof)
+                     ImmutabilityError, Transport, _sizeof, _trace_of)
 from .check import content_digest
 from .partition import stage_node
 from .stream import base_key, chunk_key
@@ -348,6 +348,37 @@ class ShardedDStore(DStore):
             self.presize_from_plan(plan)
         self.coordinator.install({prefix + k: n for k, n in routes.items()})
 
+    def register_metrics(self, registry) -> None:
+        """Base collectors (resident/peak/transport) plus the sharded
+        routing counters: hop histogram, per-tier Get counts and traffic,
+        routing-table hit/miss/refresh and coordinator syncs."""
+        super().register_metrics(registry)
+
+        def _scrape() -> None:
+            with self._stats_lock:
+                hops = dict(self.hop_hist)
+                tiers = dict(self.tier_gets)
+            for h, n in hops.items():
+                registry.counter("routing_gets", hops=h).set(n)
+            for tier, n in tiers.items():
+                registry.counter("tier_gets", tier=tier).set(n)
+            t = self.transport
+            if isinstance(t, TieredTransport):
+                for tier, n in t.tier_bytes.items():
+                    registry.counter("tier_bytes", tier=tier).set(n)
+                for tier, n in t.tier_transfers.items():
+                    registry.counter("tier_transfers", tier=tier).set(n)
+            for node, tb in self.tables.items():
+                registry.counter("routing_table_hits",
+                                 node=node).set(tb.hits)
+                registry.counter("routing_table_misses",
+                                 node=node).set(tb.misses)
+                registry.counter("routing_table_refreshes",
+                                 node=node).set(tb.refreshes)
+            registry.counter("coordinator_syncs").set(
+                self.coordinator.syncs)
+        registry.register_collector(_scrape)
+
     def presize_from_plan(self, plan: "WorkflowPlan") -> None:
         """Advisory per-node capacity from DPlan's peak-resident
         prediction (max over instances sharing the store)."""
@@ -371,7 +402,10 @@ class ShardedDStore(DStore):
         return home
 
     # -- Table 1 core API, sharded ----------------------------------------
-    def put(self, node: str, key: str, value) -> None:
+    # _put/_put_chunk/_get are the inner methods: the base class's public
+    # put/put_chunk/get wrappers add the DScope span/metric hooks once, so
+    # sharded stores are instrumented identically to the single store.
+    def _put(self, node: str, key: str, value) -> None:
         home = self._home_for_put(node, key)
         shard = self.shards[home]
         store = self.stores[node]
@@ -395,7 +429,8 @@ class ShardedDStore(DStore):
             self._note_peak()
         self.streams.notify_plain(key)
 
-    def put_chunk(self, node: str, key: str, idx: int, chunk: bytes) -> None:
+    def _put_chunk(self, node: str, key: str, idx: int,
+                   chunk: bytes) -> None:
         home = self._home_for_put(node, key)
         ck = chunk_key(key, idx)
         digest = content_digest(chunk)
@@ -482,9 +517,14 @@ class ShardedDStore(DStore):
             shard.drop_replica(key, src)    # phantom replica
             return _MISSING
         tier = TIER_MEM if src == node else TIER_NET
+        spans = self._spans
+        sp = spans.start(key, "hop", src=home, tier=tier, hops=hops,
+                         size=meta.size) if spans is not None else None
         try:
             self._move(meta.size, tier)     # receiver-driven pull
         finally:
+            if sp is not None:
+                spans.end(sp)
             shard.release_replica(key, src)
         with self._write_lock:
             if self._tracer is not None:
@@ -511,29 +551,40 @@ class ShardedDStore(DStore):
     # -- eviction, sharded -------------------------------------------------
     def evict_key(self, key: str) -> None:
         with self._write_lock:
-            if self._tracer is not None and any(
-                    sh.peek(key) is not None for sh in self.shards.values()):
+            existed = any(sh.peek(key) is not None
+                          for sh in self.shards.values())
+            if self._tracer is not None and existed:
                 self._tracer.record("evict", key)
             for store in self.stores.values():
                 store.drop_key(key)
             for shard in self.shards.values():
                 shard.drop([key])
+        if existed and self._spans is not None:
+            self._spans.event(key, "evict", parent=None,
+                              trace=_trace_of(key))
         # Routes are left installed: keys are immutable, so a stale route
         # for an evicted key can only lead to a clean block, never stale
         # bytes.
 
     def evict_instance(self, prefix: str) -> None:
+        swept: list[str] = []
         with self._write_lock:
-            if self._tracer is not None:
+            if self._tracer is not None or self._spans is not None:
                 for shard in self.shards.values():
                     for k in shard.keys():
                         if k.startswith(prefix):
-                            self._tracer.record("evict", k)
+                            if self._tracer is not None:
+                                self._tracer.record("evict", k)
+                            swept.append(k)
             for store in self.stores.values():
                 store.drop_prefix(prefix)
             for shard in self.shards.values():
                 shard.drop_prefix(prefix)
         self.streams.evict_prefix(prefix)
+        if self._spans is not None:
+            for k in swept:
+                self._spans.event(k, "evict", parent=None,
+                                  trace=_trace_of(k))
         self.coordinator.remove_prefix(prefix)
         if self._plan_reads:
             with self._plan_lock:

@@ -37,10 +37,21 @@ from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterable, Mapping, Sequence
 
+from .obs import MetricsRegistry
+
 __all__ = [
     "ContainerPool", "ContainerService", "DServe", "ServeReport",
     "InstanceStat", "percentile", "poisson_arrivals", "trace_arrivals",
 ]
+
+# The container-lifecycle metrics a ServeReport is built from; DServe.run
+# snapshots their registry totals before/after so the report covers one
+# run even though the service (and its warm containers) outlives runs.
+_SERVE_BASE_METRICS = (
+    "container_cold_starts", "container_prewarm_boots",
+    "container_warm_hits", "container_prewarm_hits",
+    "container_evictions", "container_seconds",
+)
 
 
 # ----------------------------------------------------------------------
@@ -230,6 +241,31 @@ class ContainerService:
 
     def attach_tracer(self, tracer) -> None:
         self._tracer = tracer
+
+    def register_metrics(self, registry) -> None:
+        """DScope pull collector: per-(node, image) lifecycle counters
+        scraped at ``registry.collect()`` time — zero hot-path cost."""
+        def _scrape() -> None:
+            with self._lock:
+                now = self._clock()
+                rows = [(node, image, p.cold_starts, p.prewarm_boots,
+                         p.warm_hits, p.prewarm_hits, p.evictions,
+                         p.container_seconds(now), p.live())
+                        for (node, image), p in self._pools.items()]
+            for (node, image, cold, boots, warm, pwh, ev, secs,
+                 live) in rows:
+                labels = dict(node=node, image=image)
+                registry.counter("container_cold_starts",
+                                 **labels).set(cold)
+                registry.counter("container_prewarm_boots",
+                                 **labels).set(boots)
+                registry.counter("container_warm_hits", **labels).set(warm)
+                registry.counter("container_prewarm_hits",
+                                 **labels).set(pwh)
+                registry.counter("container_evictions", **labels).set(ev)
+                registry.gauge("container_seconds", **labels).set(secs)
+                registry.gauge("containers_live", **labels).set(live)
+        registry.register_collector(_scrape)
 
     def _pool_events(self, p: ContainerPool, pre: tuple[int, int, int, int],
                      node: str, image: str, *, cold: bool | None = None,
@@ -472,6 +508,15 @@ class DServe:
     ``sharded`` serves over a :class:`~repro.core.router.ShardedDStore`
     (DShard): per-node directory shards, local routing tables and 1-hop
     transfers — byte-identical results, no central metadata hotspot.
+
+    DScope (obs.py): every DServe owns a :class:`MetricsRegistry` wired
+    with pull collectors (containers, store, routing) — ``ServeReport``
+    is built from it, and ``self.metrics.collect()`` dumps every counter
+    from one source.  Passing your own ``metrics`` registry additionally
+    enables the push-side hot-path histograms (per-Get / per-chunk
+    latency); passing a ``spans`` :class:`~repro.core.obs.Tracer` records
+    per-request span trees (request → invoke → acquire → Get/Put → chunk
+    → hop).  Both default to off-path: a plain DServe pays nothing.
     """
 
     def __init__(self, wf, *, n_nodes: int = 2, pattern: str = "dataflow",
@@ -479,7 +524,8 @@ class DServe:
                  max_per_node: int = 8, cold_start: float | None = None,
                  transport=None, get_timeout: float = 30.0,
                  evict_on_complete: bool = True, tracer=None,
-                 lint: bool = True, plan=None, sharded: bool = False):
+                 lint: bool = True, plan=None, sharded: bool = False,
+                 metrics=None, spans=None):
         from .dscheduler import DFlowEngine
         from .dstore import DStore
         from .router import ShardedDStore
@@ -508,6 +554,18 @@ class DServe:
         if tracer is not None:
             self.store.attach_tracer(tracer)
             self.containers.attach_tracer(tracer)
+        # DScope wiring: pull collectors always (they cost nothing until
+        # collect()); the hot-path push hooks only when the caller brought
+        # a registry of their own.
+        self.spans = spans
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.containers.register_metrics(self.metrics)
+        if metrics is not None:
+            self.store.attach_metrics(self.metrics)
+        else:
+            self.store.register_metrics(self.metrics)
+        if spans is not None:
+            self.store.attach_spans(spans)
         self.placement = self.engine.gs.assign(wf)
         if plan is True:
             from .plan import build_plan
@@ -548,15 +606,12 @@ class DServe:
         stats = [InstanceStat(instance=f"{self.wf.name}#{i}", arrival=a)
                  for i, a in enumerate(arrivals)]
         report.stats = stats
-        # Snapshot container metrics so the report covers THIS run only
-        # (the service — and its warm containers — outlives runs).
-        svc = self.containers
-        base = dict(cold_starts=svc.cold_starts,
-                    prewarm_boots=svc.prewarm_boots,
-                    warm_hits=svc.warm_hits,
-                    prewarm_hits=svc.prewarm_hits,
-                    evictions=svc.evictions,
-                    container_seconds=svc.container_seconds())
+        # Snapshot the registry so the report covers THIS run only (the
+        # service — and its warm containers — outlives runs).  One source:
+        # the same collectors back the registry dump and this report.
+        reg = self.metrics
+        reg.collect()
+        base = {name: reg.total(name) for name in _SERVE_BASE_METRICS}
         self.max_concurrency = 0             # per-run high-water mark
         self.store.reset_peak()              # per-run resident high-water
         t0 = time.monotonic()
@@ -599,7 +654,8 @@ class DServe:
             payload = inputs(i) if callable(inputs) else inputs
             run = InstanceRun(self.engine, self.wf, payload,
                               store=self.store, instance=stat.instance,
-                              placement=self.placement, plan=self.plan)
+                              placement=self.placement, plan=self.plan,
+                              spans=self.spans)
             # Register BEFORE starting: a node failure racing the start
             # must already see this instance to hand it its lost keys.
             with self._lock:
@@ -618,14 +674,38 @@ class DServe:
             killer.join(1.0)
         report.wall_time = time.monotonic() - t0
         report.max_concurrency = self.max_concurrency
-        report.cold_starts = svc.cold_starts - base["cold_starts"]
-        report.prewarm_boots = svc.prewarm_boots - base["prewarm_boots"]
-        report.warm_hits = svc.warm_hits - base["warm_hits"]
-        report.prewarm_hits = svc.prewarm_hits - base["prewarm_hits"]
-        report.evictions = svc.evictions - base["evictions"]
-        report.container_seconds = (svc.container_seconds()
-                                    - base["container_seconds"])
-        per_node = self.store.peak_resident_per_node()
+        reg.collect()
+
+        def _delta(name: str) -> float:
+            return reg.total(name) - base[name]
+
+        report.cold_starts = int(_delta("container_cold_starts"))
+        report.prewarm_boots = int(_delta("container_prewarm_boots"))
+        report.warm_hits = int(_delta("container_warm_hits"))
+        report.prewarm_hits = int(_delta("container_prewarm_hits"))
+        report.evictions = int(_delta("container_evictions"))
+        report.container_seconds = _delta("container_seconds")
+        per_node = {n: int(v) for n, v in reg.label_values(
+            "dstore_peak_resident_bytes", "node").items()}
         report.peak_resident_per_node = per_node
         report.peak_resident_bytes = max(per_node.values(), default=0)
+        self._publish_run_metrics(report)
         return report
+
+    def _publish_run_metrics(self, report: ServeReport) -> None:
+        """Run-level serving metrics into the registry (latency histogram,
+        request/failure totals, concurrency) so autoscaling and bench
+        emitters can read rates and tails from the same source."""
+        reg = self.metrics
+        labels = dict(workflow=report.workflow, pattern=report.pattern)
+        h = reg.histogram("serve_latency_seconds", **labels)
+        for lat in report.latencies:
+            h.observe(lat)
+        reg.counter("serve_requests_total", **labels).inc(len(report.stats))
+        reg.counter("serve_failures_total", **labels).inc(report.failures)
+        reg.gauge("serve_max_concurrency",
+                  **labels).set(report.max_concurrency)
+        if report.latencies:
+            reg.gauge("serve_p50_seconds", **labels).set(report.p50)
+            reg.gauge("serve_p95_seconds", **labels).set(report.p95)
+            reg.gauge("serve_p99_seconds", **labels).set(report.p99)

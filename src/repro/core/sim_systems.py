@@ -57,6 +57,7 @@ class InstanceResult:
     done: Event | None = None
     cancelled: bool = False
     completed: dict[str, float] = field(default_factory=dict)
+    span: object = None              # DScope request span (obs.py), or None
 
     @property
     def latency(self) -> float:
@@ -69,8 +70,15 @@ class SimSystem:
     def __init__(self, env: Env, cluster: Cluster, wf: Workflow, *,
                  pattern: str, plane, prewarm: bool, sandbox: bool,
                  central_sched: bool, name: str,
-                 single_node: str | None = None, streaming: bool = False):
+                 single_node: str | None = None, streaming: bool = False,
+                 spans=None):
         self.env = env
+        # DScope span tracer (obs.py) on the VIRTUAL clock — the driver
+        # (run_open_loop) rebinds tracer.clock to env.now.  Spans use
+        # explicit parents, never thread-local context: simulated
+        # coroutines interleave on one thread, so an implicit "current
+        # span" would attribute one instance's ops to another.
+        self.spans = spans
         self.cluster = cluster
         self.cfg = cluster.cfg
         self.wf = wf
@@ -135,6 +143,11 @@ class SimSystem:
         res = InstanceResult(inst=inst, arrival=self.env.now,
                              done=self.env.event())
         self.results.append(res)
+        if self.spans is not None:
+            trace = f"{self.wf.name}#{inst}"
+            res.span = self.spans.start(trace, "request", parent=None,
+                                        trace=trace, workflow=self.wf.name,
+                                        system=self.name)
         # Stage external inputs in the local stores of their first consumers
         # (the trigger payload arrives with the invocation).
         for k, sz in self.wf.external_inputs.items():
@@ -148,6 +161,8 @@ class SimSystem:
         def expire(_):
             if not res.done.triggered:
                 res.cancelled = True
+                if self.spans is not None:
+                    self.spans.end(res.span, cancelled=True)
                 res.done.trigger(res)
         self.env._at(self.env.now + self.cfg.timeout + 1e-6, expire)
         if self.pattern == "dataflow":
@@ -191,10 +206,19 @@ class SimSystem:
         f = self.wf.functions[fname]
         node = self.placement[fname]
         n = self.cluster.nodes[node]
+        sp = None
+        if self.spans is not None and res.span is not None:
+            sp = self.spans.start(fname, "invoke", parent=res.span,
+                                  node=node)
+            acq = self.spans.start(fname, "acquire", parent=sp, node=node)
         pool = yield self.env.process(self._acquire_container(node, fname))
+        if sp is not None:
+            self.spans.end(acq)
         if res.cancelled:
             if pool is not None:
                 pool.release()
+            if sp is not None:
+                self.spans.end(sp, cancelled=True)
             return
         # Fetch every input (parallel / fine-grained; DStore gets may block).
         # DStream: chunk-granular gets pull chunk i while the producer is
@@ -213,6 +237,8 @@ class SimSystem:
             n.cores.release()
             if pool is not None:
                 pool.release()
+            if sp is not None:
+                self.spans.end(sp, cancelled=True)
             return
         if self.streaming:
             # Announce outputs now; chunks publish paced across execution.
@@ -237,6 +263,8 @@ class SimSystem:
         if pool is not None:
             pool.release()
         res.completed[fname] = self.env.now
+        if sp is not None:
+            self.spans.end(sp)
         on_complete(fname)
 
     def _finish_if_done(self, res: InstanceResult) -> None:
@@ -245,6 +273,8 @@ class SimSystem:
             def fin(_):
                 if not res.done.triggered:
                     res.finish = self.env.now
+                    if self.spans is not None:
+                        self.spans.end(res.span, ok=True)
                     res.done.trigger(res)
             self.cluster.message("worker", MASTER).add_waiter(fin)
 
@@ -385,22 +415,22 @@ class SimSystem:
 
 # ----------------------------------------------------------------------
 def make_system(name: str, env: Env, cluster: Cluster,
-                wf: Workflow) -> SimSystem:
+                wf: Workflow, *, spans=None) -> SimSystem:
     """Factory mapping paper system names to configurations."""
     if name == "cflow":
         return SimSystem(env, cluster, wf, pattern="controlflow",
                          plane=CentralPlane(env, cluster), prewarm=False,
-                         sandbox=False, central_sched=True, name=name)
+                         sandbox=False, central_sched=True, name=name, spans=spans)
     if name == "faasflow":
         return SimSystem(env, cluster, wf, pattern="controlflow",
                          plane=HybridPlane(env, cluster, central="couch"),
                          prewarm=True, sandbox=False, central_sched=False,
-                         name=name)
+                         name=name, spans=spans)
     if name == "faasflowredis":
         return SimSystem(env, cluster, wf, pattern="controlflow",
                          plane=HybridPlane(env, cluster, central="redis"),
                          prewarm=True, sandbox=False, central_sched=False,
-                         name=name)
+                         name=name, spans=spans)
     if name == "knix":
         # Paper §5.1: "we deploy the remote Redis on Node 1 and install KNIX
         # on Node 2" — single-worker sandbox, hub Redis on another worker.
@@ -408,22 +438,24 @@ def make_system(name: str, env: Env, cluster: Cluster,
                          plane=HybridPlane(env, cluster, central="redis",
                                            hub="node1", db_exclusive=True),
                          prewarm=False, sandbox=True, central_sched=False,
-                         name=name, single_node="node2")
+                         name=name, single_node="node2", spans=spans)
     if name == "faasflow+dstore":
         return SimSystem(env, cluster, wf, pattern="controlflow",
                          plane=DStorePlane(env, cluster), prewarm=True,
-                         sandbox=False, central_sched=False, name=name)
+                         sandbox=False, central_sched=False, name=name,
+                         spans=spans)
     if name == "dflow":
         return SimSystem(env, cluster, wf, pattern="dataflow",
                          plane=DStorePlane(env, cluster), prewarm=False,
-                         sandbox=False, central_sched=False, name=name)
+                         sandbox=False, central_sched=False, name=name,
+                         spans=spans)
     if name == "dflow-stream":
         # DFlow + DStream: Algorithm 1 invocation with chunked pipelined
         # data exchange (transfer overlaps production; beyond-paper).
         return SimSystem(env, cluster, wf, pattern="dataflow",
                          plane=StreamingDStorePlane(env, cluster),
                          prewarm=False, sandbox=False, central_sched=False,
-                         name=name, streaming=True)
+                         name=name, streaming=True, spans=spans)
     if name == "dflow-shard":
         # DFlow + DShard: Algorithm 1 invocation over per-node DStore
         # shards with local routing tables — 1-hop transfers and tiered
@@ -431,5 +463,5 @@ def make_system(name: str, env: Env, cluster: Cluster,
         return SimSystem(env, cluster, wf, pattern="dataflow",
                          plane=ShardedDStorePlane(env, cluster),
                          prewarm=False, sandbox=False, central_sched=False,
-                         name=name)
+                         name=name, spans=spans)
     raise ValueError(f"unknown system {name!r}; choose from {SYSTEMS}")

@@ -35,6 +35,7 @@ from __future__ import annotations
 import queue
 import threading
 import time
+from contextlib import nullcontext
 from dataclasses import dataclass, field
 from typing import Any, Iterable, Iterator
 
@@ -369,6 +370,12 @@ class StreamReader:
     # -- internals ---------------------------------------------------------
     def _start(self) -> None:
         self._started = True
+        # DScope: the prefetch pump runs on its own thread, so the span
+        # context active *here* (the consumer's invocation span) is
+        # captured explicitly and re-activated inside the pump — the
+        # per-chunk Get spans it emits then parent correctly.
+        spans = getattr(self._store, "_spans", None)
+        self._span_parent = spans.current() if spans is not None else None
         mode = self._store.streams.wait_mode(self.key, self.timeout)
         if mode == "plain":
             value = self._store.get(self.node, self.key, timeout=self.timeout)
@@ -380,30 +387,44 @@ class StreamReader:
                                   name=f"dstream-pull-{self.key}")
             th.start()
 
+    def _observe_chunk(self, elapsed: float) -> None:
+        metrics = getattr(self._store, "_metrics", None)
+        if metrics is not None:
+            metrics.histogram("stream_chunk_seconds").observe(elapsed)
+
     def _pump(self) -> None:
         assert self._queue is not None
+        spans = getattr(self._store, "_spans", None)
+        ctx = spans.activate(self._span_parent) if spans is not None \
+            else nullcontext()
         i = 0
         try:
-            while True:
-                size = self._store.streams.wait_chunk(self.key, i,
-                                                      self.timeout)
-                if size is None:
-                    self._queue.put(_EOS)
-                    return
-                data = self._store.get(self.node, chunk_key(self.key, i),
-                                       timeout=self.timeout)
-                self._queue.put(data)
-                i += 1
+            with ctx:
+                while True:
+                    t0 = time.monotonic()
+                    size = self._store.streams.wait_chunk(self.key, i,
+                                                          self.timeout)
+                    if size is None:
+                        self._queue.put(_EOS)
+                        return
+                    data = self._store.get(self.node,
+                                           chunk_key(self.key, i),
+                                           timeout=self.timeout)
+                    self._observe_chunk(time.monotonic() - t0)
+                    self._queue.put(data)
+                    i += 1
         except BaseException as exc:          # noqa: BLE001 - hand to reader
             self._queue.put(exc)
 
     def _next_sync(self) -> Any:
+        t0 = time.monotonic()
         size = self._store.streams.wait_chunk(self.key, self._idx,
                                               self.timeout)
         if size is None:
             raise StopIteration
         data = self._store.get(self.node, chunk_key(self.key, self._idx),
                                timeout=self.timeout)
+        self._observe_chunk(time.monotonic() - t0)
         self._idx += 1
         return data
 
