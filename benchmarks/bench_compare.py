@@ -23,7 +23,8 @@ import sys
 
 from repro.core.obs import compare_docs
 
-from . import dcheck_overhead, dplan_overhead, dshard_routing, obs_overhead
+from . import (dcheck_overhead, dplan_overhead, dshard_routing,
+               obs_overhead, serve_autoscale)
 
 
 def _regen_dcheck(config, repeats):
@@ -45,12 +46,21 @@ def _regen_dshard(config, repeats):
     return dshard_routing.measure(n_nodes=config["nodes"], cfg=cfg)
 
 
+def _regen_scale(config, repeats):
+    # The committed doc carries the rising-RPS sweep; regenerating it per
+    # gate check would triple the runtime for report-only rows, so the
+    # re-run gates on the comparison arms alone.
+    cfg = {k: v for k, v in config.items() if k != "burst_rates"}
+    return serve_autoscale.measure(cfg, repeats=repeats)
+
+
 # name -> (committed baseline path, regenerator)
 BENCHES = {
     "dcheck": ("BENCH_dcheck.json", _regen_dcheck),
     "dplan": ("BENCH_dplan.json", _regen_dplan),
     "dshard": ("BENCH_dshard.json", _regen_dshard),
     "obs": ("BENCH_obs.json", _regen_obs),
+    "scale": ("BENCH_scale.json", _regen_scale),
 }
 
 

@@ -21,6 +21,9 @@ Layers:
   DF diagnostic codes; ``python -m repro.lint`` CLI).
 * :mod:`repro.core.check`        — DCheck dynamic invariant checker
   (trace recording + offline happens-before/immutability validation).
+* :mod:`repro.core.scale`        — DScale: rate-estimating pool
+  autoscaler, SLO-aware prewarm budgets (container-seconds), and
+  inhomogeneous (diurnal / bursty) arrival generators.
 * :mod:`repro.core.obs`          — DScope observability: MetricsRegistry,
   per-request span Tracer (JSONL/Perfetto exporters), plan-vs-actual
   attribution, and the standardized ``dflow-bench/v1`` schema
@@ -44,8 +47,12 @@ from .experiments import (ExperimentResult, cold_start_latency,
 from .partition import cut_bytes, partition_workflow, stage_node
 from .router import (Coordinator, RoutingTable, ShardedDStore,
                      TieredTransport, routes_from_plan, static_routes)
-from .serve import (ContainerPool, ContainerService, DServe, ServeReport,
-                    poisson_arrivals, trace_arrivals)
+from .scale import (AutoscalerConfig, PoolAutoscaler, PoolSpec,
+                    PrewarmBudget, PrewarmGrant, RateEstimator,
+                    ScaleDecision, allocate_prewarms, bursty_arrivals,
+                    diurnal_arrivals)
+from .serve import (ContainerPool, ContainerService, DServe, Lease,
+                    ServeReport, poisson_arrivals, trace_arrivals)
 from .sim_systems import SYSTEMS, make_system
 from .simcluster import SimConfig
 from .stream import StreamBroken, StreamReader, StreamWriter
@@ -61,8 +68,11 @@ __all__ = [
     "dataflow_initial_frontier", "dataflow_next_frontier",
     "DStore", "DataDirectoryService", "LocalStore", "Transport",
     "StreamBroken", "StreamReader", "StreamWriter",
-    "ContainerPool", "ContainerService", "DServe", "ServeReport",
+    "ContainerPool", "ContainerService", "DServe", "Lease", "ServeReport",
     "poisson_arrivals", "trace_arrivals",
+    "AutoscalerConfig", "PoolAutoscaler", "PoolSpec",
+    "PrewarmBudget", "PrewarmGrant", "RateEstimator", "ScaleDecision",
+    "allocate_prewarms", "bursty_arrivals", "diurnal_arrivals",
     "ExperimentResult", "cold_start_latency", "percentile",
     "run_closed_loop", "run_open_loop",
     "cut_bytes", "partition_workflow", "stage_node",

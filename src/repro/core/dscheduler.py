@@ -124,7 +124,7 @@ class InstanceRun:
                  store: DStore | None = None, instance: str | None = None,
                  placement: dict[str, str] | None = None,
                  inject_failure: str | None = None,
-                 plan=None, spans=None):
+                 plan=None, spans=None, budget=None):
         self.engine = engine
         self.wf = wf
         self.inputs = dict(inputs or {})
@@ -157,6 +157,13 @@ class InstanceRun:
                 getattr(self.store, "_spans", None) is None:
             self.store.attach_spans(self.spans)
         self._prewarm_timers: list[threading.Timer] = []
+        # DScale prewarm budget (scale.py PrewarmBudget): when present,
+        # every prewarm — slack-scheduled or heuristic — must be granted
+        # container-seconds first, and unfired grants are refunded when
+        # the instance completes or is evicted.
+        self._budget = budget
+        self._grants: list[Any] = []
+        self._prewarms_cancelled = False
         self.state = _InstanceState(wf)
         self.report = RunReport(outputs={}, wall_time=0.0)
         self._inject_failure = inject_failure
@@ -220,20 +227,67 @@ class InstanceRun:
         """Boot containers per the plan's slack schedule (§3.2 refined):
         each function's container starts booting at ``est - cold_start``
         so it turns warm exactly when the frontier can reach the function
-        — instead of the moment any precursor launches."""
+        — instead of the moment any precursor launches.
+
+        Under a DScale budget the schedule is first filtered through
+        :func:`repro.core.scale.allocate_prewarms` (slack-ranked grants:
+        critical boots admitted first, highest-slack dropped when the
+        budget tightens), and each timer fires through
+        :meth:`_fire_prewarm` so revoked/cancelled boots never happen.
+        """
         engine = self.engine
         if engine.containers is None or not engine.prewarm:
             return
-        for fname, boot_at, cold in self.plan.prewarm_schedule:
+        if self._budget is not None:
+            from .scale import allocate_prewarms
+
+            schedule = allocate_prewarms(self.plan, self._budget,
+                                         now=self._budget_now())
+            self._grants.extend(g for *_, g in schedule if g is not None)
+        else:
+            schedule = [(f, b, c, None)
+                        for f, b, c in self.plan.prewarm_schedule]
+        for fname, boot_at, cold, grant in schedule:
             node, image = self.placement[fname], self.image(fname)
             if boot_at <= 0.0:
-                engine.containers.prewarm(node, image, cold)
+                self._fire_prewarm(node, image, cold, grant)
             else:
-                t = threading.Timer(boot_at, engine.containers.prewarm,
-                                    args=(node, image, cold))
+                t = threading.Timer(boot_at, self._fire_prewarm,
+                                    args=(node, image, cold, grant))
                 t.daemon = True
                 t.start()
                 self._prewarm_timers.append(t)
+
+    def _budget_now(self) -> float:
+        return time.monotonic()
+
+    def _fire_prewarm(self, node: str, image: str, cold: float,
+                      grant=None) -> None:
+        """Timer-safe prewarm: every guard a late-firing timer needs.
+        No boot happens after the instance cancelled its prewarms, after
+        the container service shut down or lost the node (the service
+        itself rechecks under its lock), or after the budget revoked the
+        grant; a granted boot that turns out to be a no-op is refunded."""
+        if self._prewarms_cancelled:
+            if grant is not None:
+                self._budget.cancel(grant)
+            return
+        if grant is not None and not self._budget.settle(grant):
+            return                      # revoked while the timer was armed
+        booted = self.engine.containers.prewarm(node, image, cold)
+        if grant is not None and not booted:
+            self._budget.refund(grant)
+
+    def _cancel_prewarms(self) -> None:
+        """Cancel pending prewarm timers on every exit path (completion,
+        failure, eviction) and refund their unfired budget grants."""
+        self._prewarms_cancelled = True
+        for t in self._prewarm_timers:
+            t.cancel()
+        if self._budget is not None:
+            for g in self._grants:
+                if not g.fired:
+                    self._budget.cancel(g)
 
     def wait(self, timeout: float | None = None) -> RunReport:
         """Block until the instance completes; returns the report."""
@@ -268,8 +322,7 @@ class InstanceRun:
         state, wf = self.state, self.wf
         state.all_done.wait(timeout=timeout if timeout is not None
                             else self.engine.get_timeout * 2)
-        for t in self._prewarm_timers:
-            t.cancel()
+        self._cancel_prewarms()
         if state.failed:
             fname, exc = next(iter(state.failed.items()))
             raise RuntimeError(f"function {fname!r} failed") from exc
@@ -294,8 +347,7 @@ class InstanceRun:
     def evict(self) -> None:
         """Instance-scoped eviction: free every key this instance stored
         (bounded memory under sustained serving)."""
-        for t in self._prewarm_timers:
-            t.cancel()
+        self._cancel_prewarms()
         if self._ns:
             self.store.evict_instance(self._ns)
 
@@ -321,9 +373,7 @@ class InstanceRun:
         if (engine.containers is not None and engine.prewarm
                 and engine.pattern == "dataflow" and self.plan is None):
             for s in wf.successors[fname]:
-                engine.containers.prewarm(
-                    self.placement[s], self.image(s),
-                    wf.functions[s].cold_start)
+                self._prewarm_successor(s)
         if engine.straggler_factor and wf.functions[fname].exec_time:
             budget = engine.straggler_factor * wf.functions[fname].exec_time
 
@@ -337,6 +387,26 @@ class InstanceRun:
                         target=self._execute, args=(fname, alt),
                         kwargs={"duplicate": True}, daemon=True).start()
             threading.Thread(target=watchdog, daemon=True).start()
+
+    def _prewarm_successor(self, s: str) -> None:
+        """Heuristic (§3.2, no plan) successor prewarm.  With a DScale
+        budget the boot is charged ``cold_start`` container-seconds at
+        slack 0 (a heuristic has no slack estimate); denial drops the
+        boot, and a no-op prewarm (idle container already there) refunds
+        the grant."""
+        wf = self.wf
+        node, image = self.placement[s], self.image(s)
+        cold = wf.functions[s].cold_start
+        if self._budget is None:
+            self.engine.containers.prewarm(node, image, cold)
+            return
+        grant = self._budget.request(s, cold, slack=0.0,
+                                     now=self._budget_now())
+        if grant is None or not self._budget.settle(grant):
+            return
+        booted = self.engine.containers.prewarm(node, image, cold)
+        if not booted:
+            self._budget.refund(grant)
 
     def _execute(self, fname: str, node: str, *,
                  duplicate: bool = False) -> None:
@@ -357,36 +427,38 @@ class InstanceRun:
         finally:
             spans.end(sp)
 
-    def _acquire(self, node: str, fname: str, cold_start: float) -> bool:
+    def _acquire(self, node: str, fname: str, cold_start: float):
         """Container acquire, span-wrapped (the ``cold`` attribute is what
-        plan-vs-actual attribution reads for prewarm accuracy)."""
+        plan-vs-actual attribution reads for prewarm accuracy).  Returns
+        the :class:`~repro.core.serve.Lease` token that must be handed
+        back on release — the token pins *which* container this function
+        holds."""
         containers, spans = self.engine.containers, self.spans
         if spans is None:
             return containers.acquire(node, self.image(fname), cold_start)
         sp = spans.start(fname, "acquire", node=node)
         try:
-            cold = containers.acquire(node, self.image(fname), cold_start)
+            lease = containers.acquire(node, self.image(fname), cold_start)
         except BaseException:
             spans.end(sp, error=True)
             raise
-        spans.end(sp, cold=cold)
-        return cold
+        spans.end(sp, cold=lease.cold)
+        return lease
 
     def _execute_inner(self, fname: str, node: str, *,
                        duplicate: bool = False) -> None:
         state, wf, engine = self.state, self.wf, self.engine
         f = wf.functions[fname]
         containers = engine.containers
-        leased = False
+        lease = None
         plan_mode = self.plan is not None
         try:
             if containers is not None and not plan_mode:
                 # Container acquire happens at launch time — before the
                 # input fetches below block — so a cold boot overlaps the
                 # precursor's execution under the dataflow pattern.
-                cold = self._acquire(node, fname, f.cold_start)
-                leased = True
-                if cold:
+                lease = self._acquire(node, fname, f.cold_start)
+                if lease.cold:
                     with state.lock:
                         self.report.cold_starts += 1
             # A StreamBroken during fetch/execute/emit means an upstream
@@ -396,14 +468,13 @@ class InstanceRun:
             for attempt in range(3):
                 try:
                     kwargs = self._fetch_inputs(node, f)
-                    if containers is not None and not leased:
+                    if containers is not None and lease is None:
                         # Plan mode: acquire only once inputs are in hand,
                         # so the container is not leased during the input
                         # wait and the slack-timed prewarm (armed at
                         # start()) has it booted by now.
-                        cold = self._acquire(node, fname, f.cold_start)
-                        leased = True
-                        if cold:
+                        lease = self._acquire(node, fname, f.cold_start)
+                        if lease.cold:
                             with state.lock:
                                 self.report.cold_starts += 1
                     if containers is not None:
@@ -440,8 +511,8 @@ class InstanceRun:
         except BaseException as exc:   # noqa: BLE001 - report upward
             state.mark_failed(fname, exc)
         finally:
-            if leased:
-                containers.release(node, self.image(fname))
+            if lease is not None:
+                containers.release(node, self.image(fname), lease)
 
     def _on_complete(self, fname: str) -> None:
         state, wf = self.state, self.wf
@@ -582,7 +653,7 @@ class DFlowEngine:
               *, store: DStore | None = None, instance: str | None = None,
               placement: dict[str, str] | None = None,
               inject_failure: str | None = None,
-              plan=None, spans=None) -> InstanceRun:
+              plan=None, spans=None, budget=None) -> InstanceRun:
         """Launch one instance and return its handle (non-blocking) —
         the entry point serving layers use to run many instances
         concurrently over a shared ``store``."""
@@ -597,7 +668,7 @@ class DFlowEngine:
         return InstanceRun(self, wf, inputs, store=store, instance=instance,
                            placement=placement,
                            inject_failure=inject_failure, plan=plan,
-                           spans=spans).start()
+                           spans=spans, budget=budget).start()
 
     def run(self, wf: Workflow, inputs: Mapping[str, Any] | None = None,
             *, inject_failure: str | None = None,

@@ -95,6 +95,14 @@ class FunctionPlan:
     def critical(self) -> bool:
         return self.slack <= 1e-12
 
+    @property
+    def boot_cost(self) -> float:
+        """Container-seconds a slack-timed prewarm spends ahead of the
+        function's earliest start (``est - boot_at`` = ``min(cold_start,
+        est)``) — the price DScale's :class:`~repro.core.scale.
+        PrewarmBudget` debits per boot."""
+        return max(0.0, self.est - self.boot_at)
+
 
 @dataclass(frozen=True)
 class TransferPlan:

@@ -377,6 +377,11 @@ class ShardedDStore(DStore):
                                  node=node).set(tb.refreshes)
             registry.counter("coordinator_syncs").set(
                 self.coordinator.syncs)
+            # Per-node byte budgets (presized from DPlan's peak_resident):
+            # DScale's autoscaler reads these against resident bytes to
+            # hold scale-up on memory-bound nodes.
+            for node, cap in self.capacity_bytes.items():
+                registry.gauge("capacity_bytes", node=node).set(cap)
         registry.register_collector(_scrape)
 
     def presize_from_plan(self, plan: "WorkflowPlan") -> None:

@@ -40,17 +40,18 @@ from typing import Any, Callable, Iterable, Mapping, Sequence
 from .obs import MetricsRegistry
 
 __all__ = [
-    "ContainerPool", "ContainerService", "DServe", "ServeReport",
+    "ContainerPool", "ContainerService", "DServe", "Lease", "ServeReport",
     "InstanceStat", "percentile", "poisson_arrivals", "trace_arrivals",
 ]
 
-# The container-lifecycle metrics a ServeReport is built from; DServe.run
-# snapshots their registry totals before/after so the report covers one
-# run even though the service (and its warm containers) outlives runs.
+# The metrics a ServeReport is built from; DServe.run snapshots their
+# registry totals before/after so the report covers one run even though
+# the service (and its warm containers) outlives runs.
 _SERVE_BASE_METRICS = (
     "container_cold_starts", "container_prewarm_boots",
     "container_warm_hits", "container_prewarm_hits",
     "container_evictions", "container_seconds",
+    "serve_queued_total", "serve_shed_total",
 )
 
 
@@ -64,6 +65,23 @@ class _Container:
     ready_at: float                  # when the boot completes (<= now: ready)
     busy: bool                       # leased to a running function
     idle_since: float                # last release time (TTL anchor)
+
+
+@dataclass
+class Lease:
+    """Handle for one leased container.
+
+    ``release(lease, now)`` must return the *same* container the acquire
+    marked busy — with mixed warm hits and prewarm hits a first-busy
+    release can mark a still-booting container idle with the wrong
+    ``idle_since``, skewing MRU reuse, TTL eviction, and
+    container-seconds.  The token pins the container identity.
+    """
+
+    container: _Container
+    delay: float                     # boot delay the caller must wait out
+    cold: bool                       # paid a full request-path cold boot
+    released: bool = False
 
 
 class ContainerPool:
@@ -97,6 +115,12 @@ class ContainerPool:
         self.prewarm_hits = 0
         self.evictions = 0
         self._finalized_seconds = 0.0
+        # DScale autoscaler target: None = TTL-only (classic keep-alive).
+        # When set it pins the pool from both sides: sweep() reclaims
+        # idle containers beyond it *before* their TTL expires (the
+        # container-seconds win) but never TTL-evicts below it, and
+        # set_target() boots up to it ahead of demand.
+        self.target: int | None = None
 
     # -- derived state -----------------------------------------------------
     @property
@@ -123,27 +147,52 @@ class ContainerPool:
             max(now, c.boot_at) - c.boot_at for c in self._containers)
 
     # -- lifecycle ---------------------------------------------------------
-    def sweep(self, now: float) -> int:
-        """Evict idle containers whose keep-alive TTL expired; returns how
-        many were reclaimed (the simulator releases capacity per eviction)."""
+    def sweep(self, now: float, *, enforce_target: bool = True) -> int:
+        """Evict idle containers whose keep-alive TTL expired, then — when
+        an autoscaler :attr:`target` is set — reclaim idle containers
+        beyond the target immediately (LRU first, busy never).  The
+        target is a two-sided pin: TTL expiry never shrinks the pool
+        below it either (the autoscaler's floor outranks keep-alive, or
+        a lull longer than the TTL would silently drain a pool the
+        control loop believes is provisioned).  Returns how many were
+        evicted (the simulator releases capacity per eviction)."""
         evicted = 0
-        keep: list[_Container] = []
-        for c in self._containers:
+        floor = self.target if self.target is not None else 0
+        expired = sorted(
+            (c for c in self._containers
+             if not c.busy
+             and max(c.idle_since, c.ready_at) + self.keepalive <= now),
+            key=lambda c: c.idle_since)
+        for c in expired:
+            if len(self._containers) <= floor:
+                break
             expires = max(c.idle_since, c.ready_at) + self.keepalive
-            if not c.busy and expires <= now:
-                self._finalized_seconds += expires - c.boot_at
+            self._containers.remove(c)
+            self._finalized_seconds += expires - c.boot_at
+            self.evictions += 1
+            evicted += 1
+        if enforce_target and self.target is not None:
+            idle = sorted((c for c in self._containers if not c.busy),
+                          key=lambda c: c.idle_since)
+            for c in idle:
+                if len(self._containers) <= self.target:
+                    break
+                self._containers.remove(c)
+                self._finalized_seconds += max(now, c.boot_at) - c.boot_at
                 self.evictions += 1
                 evicted += 1
-            else:
-                keep.append(c)
-        self._containers = keep
         return evicted
 
-    def try_acquire_warm(self, now: float) -> float | None:
-        """Lease an existing container: 0.0 for a ready idle one, the
-        residual boot delay for one still booting, None if a cold boot is
-        required.  Marks the chosen container busy."""
-        self.sweep(now)
+    def try_acquire_warm(self, now: float) -> Lease | None:
+        """Lease an existing container: delay 0.0 for a ready idle one,
+        the residual boot delay for one still booting, None if a cold boot
+        is required.  Marks the chosen container busy and returns the
+        :class:`Lease` token identifying it (pass it back to
+        :meth:`release`)."""
+        # TTL-expired containers must not be reused, but an over-target
+        # pool still prefers serving the request in hand over evicting —
+        # it shrinks on the next release/set_target sweep instead.
+        self.sweep(now, enforce_target=False)
         ready = [c for c in self._containers
                  if not c.busy and c.ready_at <= now]
         if ready:
@@ -151,42 +200,66 @@ class ContainerPool:
             c = max(ready, key=lambda c: c.idle_since)
             c.busy = True
             self.warm_hits += 1
-            return 0.0
+            return Lease(container=c, delay=0.0, cold=False)
         booting = [c for c in self._containers if not c.busy]
         if booting:
             c = min(booting, key=lambda c: c.ready_at)
             c.busy = True
             self.prewarm_hits += 1
-            return c.ready_at - now
+            return Lease(container=c, delay=c.ready_at - now, cold=False)
         return None
 
-    def acquire(self, now: float) -> tuple[float, bool]:
-        """Lease a container; returns ``(delay_until_ready, was_cold)``."""
-        d = self.try_acquire_warm(now)
-        if d is not None:
-            return d, False
-        self._containers.append(
-            _Container(boot_at=now, ready_at=now + self.cold_start,
-                       busy=True, idle_since=now))
+    def acquire(self, now: float) -> Lease:
+        """Lease a container; the returned token carries the delay until
+        it is ready and whether a request-path cold boot was paid."""
+        lease = self.try_acquire_warm(now)
+        if lease is not None:
+            return lease
+        c = _Container(boot_at=now, ready_at=now + self.cold_start,
+                       busy=True, idle_since=now)
+        self._containers.append(c)
         self.cold_starts += 1
-        return self.cold_start, True
+        return Lease(container=c, delay=self.cold_start, cold=True)
 
-    def release(self, now: float) -> None:
-        """Return a leased container to the idle (warm) set."""
-        for c in self._containers:
-            if c.busy:
-                c.busy = False
-                c.idle_since = max(now, c.ready_at)
-                self.sweep(now)
-                return
-        raise RuntimeError(f"pool {self.image!r}: release without acquire")
+    def release(self, lease: Lease, now: float) -> None:
+        """Return the leased container to the idle (warm) set.  Tolerates
+        the container having been retired underneath the lease (pool
+        shutdown / node failure) — its seconds were finalized then."""
+        if lease.released:
+            raise RuntimeError(
+                f"pool {self.image!r}: lease released twice")
+        lease.released = True
+        c = lease.container
+        if c not in self._containers:
+            return                     # retired by shutdown()/node failure
+        if not c.busy:
+            raise RuntimeError(f"pool {self.image!r}: lease not busy")
+        c.busy = False
+        c.idle_since = max(now, c.ready_at)
+        self.sweep(now)
+
+    def set_target(self, target: int | None, now: float) -> tuple[int, int]:
+        """Autoscaler hook: pin the pool's live-container target.  Boots
+        up to the target immediately (counted as prewarm boots — they are
+        proactive boots ahead of demand) and reclaims idle containers
+        beyond it ahead of their TTL.  Returns ``(booted, evicted)``."""
+        self.target = None if target is None else max(0, int(target))
+        booted = 0
+        while self.target is not None and self.live() < self.target:
+            self._containers.append(
+                _Container(boot_at=now, ready_at=now + self.cold_start,
+                           busy=False, idle_since=now + self.cold_start))
+            self.prewarm_boots += 1
+            booted += 1
+        evicted = self.sweep(now)
+        return booted, evicted
 
     def prewarm(self, now: float) -> float:
         """Start booting one container ahead of need (paper §3.2 prewarm
         trigger: called when the function's *precursor launches*).  No-op if
         an idle or booting container already exists.  Returns the delay
         until an idle container will be ready."""
-        self.sweep(now)
+        self.sweep(now, enforce_target=False)
         idle = [c for c in self._containers if not c.busy]
         if idle:
             return max(0.0, min(c.ready_at for c in idle) - now)
@@ -234,6 +307,11 @@ class ContainerService:
         self._pools: dict[tuple[str, str], ContainerPool] = {}
         self._slots = {n: threading.Semaphore(int(max_per_node))
                        for n in self.nodes}
+        # Lifecycle guards for DScale: prewarms (including ones armed on
+        # threading.Timers by the scheduler) must become no-ops once the
+        # service shut down or the node died.
+        self.closed = False
+        self._failed_nodes: set[str] = set()
         # DCheck hook: container lifecycle events land in the same trace
         # as data-plane events, so PlanConformance can judge whether a
         # cold boot was avoidable (an unleased container existed).
@@ -298,37 +376,85 @@ class ContainerService:
                 image, cold_start=cold_start, keepalive=self.keepalive)
         return p
 
-    def acquire(self, node: str, image: str, cold_start: float = 0.5) -> bool:
-        """Lease a container, sleeping out its boot delay; returns whether
-        the request paid a full cold start."""
+    def acquire(self, node: str, image: str,
+                cold_start: float = 0.5) -> Lease:
+        """Lease a container, sleeping out its boot delay; the returned
+        :class:`Lease` records whether a full cold start was paid and must
+        be handed back to :meth:`release`."""
         with self._lock:
             p = self.pool(node, image, cold_start)
             pre = (p.warm_hits, p.prewarm_hits, p.evictions, p.prewarm_boots)
-            delay, cold = p.acquire(self._clock())
+            lease = p.acquire(self._clock())
             if self._tracer is not None:
-                self._pool_events(p, pre, node, image, cold=cold)
-        if delay > 0:
-            self._sleep(delay)
-        return cold
+                self._pool_events(p, pre, node, image, cold=lease.cold)
+        if lease.delay > 0:
+            self._sleep(lease.delay)
+        return lease
 
-    def release(self, node: str, image: str) -> None:
+    def release(self, node: str, image: str, lease: Lease) -> None:
         with self._lock:
-            p = self._pools[(node, image)]
+            p = self._pools.get((node, image))
+            if p is None:
+                # Node failed / service shut down underneath the lease;
+                # its container-seconds were finalized then.
+                lease.released = True
+                return
             pre = (p.warm_hits, p.prewarm_hits, p.evictions, p.prewarm_boots)
-            p.release(self._clock())
+            p.release(lease, self._clock())
             if self._tracer is not None:
                 self._pool_events(p, pre, node, image, released=True)
 
-    def prewarm(self, node: str, image: str, cold_start: float = 0.5) -> None:
+    def prewarm(self, node: str, image: str,
+                cold_start: float = 0.5) -> bool:
         """Dataflow-triggered prewarm (§3.2): begin booting the function's
-        container the moment its precursor launches.  Returns immediately —
-        readiness is a timestamp, not a thread."""
+        container the moment its precursor launches.  Returns immediately
+        — readiness is a timestamp, not a thread — with whether a boot
+        actually started (False: an idle/booting container already
+        existed, or the service/node is gone, so a prewarm budget should
+        be refunded)."""
         with self._lock:
+            if self.closed or node in self._failed_nodes:
+                return False
             p = self.pool(node, image, cold_start)
             pre = (p.warm_hits, p.prewarm_hits, p.evictions, p.prewarm_boots)
             p.prewarm(self._clock())
+            booted = p.prewarm_boots > pre[3]
             if self._tracer is not None:
                 self._pool_events(p, pre, node, image)
+        return booted
+
+    def set_target(self, node: str, image: str, target: int | None,
+                   cold_start: float = 0.5) -> tuple[int, int]:
+        """DScale autoscaler hook: pin one pool's live-container target
+        (boot up to it, reclaim idle beyond it ahead of TTL)."""
+        with self._lock:
+            if self.closed or node in self._failed_nodes:
+                return (0, 0)
+            p = self.pool(node, image, cold_start)
+            pre = (p.warm_hits, p.prewarm_hits, p.evictions, p.prewarm_boots)
+            out = p.set_target(target, self._clock())
+            if self._tracer is not None:
+                self._pool_events(p, pre, node, image)
+        return out
+
+    def fail_node(self, node: str) -> None:
+        """Node death: retire the node's pools (finalizing their
+        container-seconds); later prewarms/scale decisions for it no-op
+        and in-flight releases become tolerated no-ops."""
+        with self._lock:
+            self._failed_nodes.add(node)
+            now = self._clock()
+            for (n, image), p in list(self._pools.items()):
+                if n == node:
+                    p.shutdown(now)
+
+    def shutdown(self) -> float:
+        """Retire every pool; returns total container-seconds.  Armed
+        prewarm timers that fire afterwards are no-ops."""
+        with self._lock:
+            self.closed = True
+            now = self._clock()
+            return sum(p.shutdown(now) for p in self._pools.values())
 
     @contextmanager
     def slot(self, node: str):
@@ -393,10 +519,21 @@ def poisson_arrivals(rate_per_s: float, n: int,
 
 
 def trace_arrivals(times: Iterable[float]) -> list[float]:
-    """Trace-driven arrivals: validate + sort a recorded timestamp list."""
-    out = sorted(float(t) for t in times)
-    if out and out[0] < 0:
-        raise ValueError("trace timestamps must be >= 0")
+    """Trace-driven arrivals: validate + sort a recorded timestamp list.
+
+    NaN/inf are rejected, not just negatives: NaN sorts unpredictably
+    (it silently corrupts the schedule ordering) and inf wedges the
+    open-loop arrival sleep forever.
+    """
+    out = []
+    for t in times:
+        f = float(t)
+        if not math.isfinite(f):
+            raise ValueError(f"trace timestamps must be finite, got {f!r}")
+        if f < 0:
+            raise ValueError("trace timestamps must be >= 0")
+        out.append(f)
+    out.sort()
     return out
 
 
@@ -408,16 +545,20 @@ def trace_arrivals(times: Iterable[float]) -> list[float]:
 class InstanceStat:
     instance: str
     arrival: float                   # seconds from serve start
-    latency: float = math.nan        # end-to-end (start -> all done)
+    latency: float = math.nan        # end-to-end (admission -> all done)
     ok: bool = False
     error: str = ""
     reexecuted: int = 0
     outputs: dict = field(default_factory=dict)   # sink outputs (response)
+    queue_wait: float = 0.0          # admission-queue wait (DScale)
+    shed: bool = False               # rejected: queue full (backpressure)
 
 
 def percentile(values: list[float], q: float) -> float:
     """Linear-interpolated percentile (q in [0,100]).  The project's one
     implementation — ``repro.core.experiments`` re-exports it."""
+    if not 0.0 <= q <= 100.0:       # also rejects NaN (comparison False)
+        raise ValueError(f"percentile q must be in [0, 100], got {q!r}")
     if not values:
         return math.nan
     v = sorted(values)
@@ -450,6 +591,10 @@ class ServeReport:
     # needs and was incomparable to DPlan's per-node peak_resident.
     peak_resident_bytes: int = 0
     peak_resident_per_node: dict = field(default_factory=dict)
+    # DScale admission control (derived from registry deltas like the
+    # container counters above).
+    queued: int = 0                  # requests that waited in admission
+    shed: int = 0                    # requests rejected (queue full)
 
     @property
     def latencies(self) -> list[float]:
@@ -457,7 +602,16 @@ class ServeReport:
 
     @property
     def failures(self) -> int:
-        return sum(1 for s in self.stats if not s.ok)
+        return sum(1 for s in self.stats if not s.ok and not s.shed)
+
+    @property
+    def queue_waits(self) -> list[float]:
+        return [s.queue_wait for s in self.stats if s.queue_wait > 0]
+
+    @property
+    def queue_wait_p95(self) -> float:
+        return percentile(self.queue_waits, 95.0) if self.queue_waits \
+            else 0.0
 
     @property
     def p50(self) -> float:
@@ -484,6 +638,8 @@ class ServeReport:
             "prewarm_hits": self.prewarm_hits,
             "container_seconds": round(self.container_seconds, 3),
             "peak_resident_bytes": self.peak_resident_bytes,
+            "queued": self.queued, "shed": self.shed,
+            "queue_wait_p95_s": round(self.queue_wait_p95, 4),
         }
 
 
@@ -525,7 +681,9 @@ class DServe:
                  transport=None, get_timeout: float = 30.0,
                  evict_on_complete: bool = True, tracer=None,
                  lint: bool = True, plan=None, sharded: bool = False,
-                 metrics=None, spans=None):
+                 metrics=None, spans=None, max_inflight: int | None = None,
+                 queue_depth: int | None = None, autoscale=None,
+                 prewarm_budget=None):
         from .dscheduler import DFlowEngine
         from .dstore import DStore
         from .router import ShardedDStore
@@ -576,6 +734,36 @@ class DServe:
         self._lock = threading.Lock()
         self._active: dict[str, Any] = {}      # instance -> InstanceRun
         self.max_concurrency = 0
+        # -- DScale (scale.py) ------------------------------------------
+        # Admission control: at most max_inflight instances run at once;
+        # excess arrivals wait in a bounded FIFO (queue_depth; None =
+        # unbounded) and overflow is shed.  None/None = classic unbounded
+        # admission (behavior unchanged).
+        if max_inflight is not None and max_inflight < 1:
+            raise ValueError("max_inflight must be >= 1")
+        if queue_depth is not None and queue_depth < 0:
+            raise ValueError("queue_depth must be >= 0")
+        self.max_inflight = max_inflight
+        self.queue_depth = queue_depth
+        from .scale import (AutoscalerConfig, PoolAutoscaler, PoolSpec,
+                            PrewarmBudget)
+
+        if isinstance(prewarm_budget, (int, float)):
+            prewarm_budget = PrewarmBudget(float(prewarm_budget))
+        self.prewarm_budget = prewarm_budget
+        self.autoscaler = None
+        if autoscale:
+            cfg = autoscale if isinstance(autoscale, AutoscalerConfig) \
+                else AutoscalerConfig()
+            specs = [PoolSpec(node=self.placement[f],
+                              image=f"{wf.name}/{f}",
+                              service_time=fn.exec_time,
+                              cold_start=fn.cold_start)
+                     for f, fn in wf.functions.items()]
+            self.autoscaler = PoolAutoscaler(
+                self.metrics, specs, cfg=cfg, spans=self.spans,
+                apply=self.containers.set_target,
+                arrivals_labels=dict(workflow=wf.name, pattern=pattern))
 
     # ------------------------------------------------------------------
     def fail_node(self, node: str) -> list[str]:
@@ -630,10 +818,29 @@ class DServe:
                                       name="dserve-failure")
             killer.start()
 
+        labels = dict(workflow=self.wf.name, pattern=self.pattern)
+        # Admission state (DScale): bounded concurrency + FIFO overflow
+        # queue.  All transitions happen under self._lock; `outstanding`
+        # counts stats not yet resolved (finished or shed) so the waiter
+        # below survives launches that happen from finish threads.
+        from collections import deque
+        admission_queue: deque = deque()
+        inflight = [0]
+        outstanding = [len(stats)]
+        all_done = threading.Event()
+        if not stats:
+            all_done.set()
+
+        def resolve_one() -> None:
+            with self._lock:
+                outstanding[0] -= 1
+                if outstanding[0] <= 0:
+                    all_done.set()
+
         def finish(stat: InstanceStat, run) -> None:
             try:
                 rep = run.wait()
-                stat.latency = rep.wall_time
+                stat.latency = rep.wall_time + stat.queue_wait
                 stat.reexecuted = len(rep.reexecuted)
                 stat.outputs = rep.outputs
                 stat.ok = True
@@ -644,18 +851,19 @@ class DServe:
                     self._active.pop(stat.instance, None)
                 if self.evict_on_complete:
                     self.store.evict_instance(f"{stat.instance}:")
+                resolve_one()
+                self._admit_next(admission_queue, inflight, launch, reg,
+                                 labels)
 
         from .dscheduler import InstanceRun
 
-        for i, stat in enumerate(stats):
-            delay = stat.arrival - (time.monotonic() - t0)
-            if delay > 0:
-                time.sleep(delay)
+        def launch(i: int, stat: InstanceStat) -> None:
             payload = inputs(i) if callable(inputs) else inputs
             run = InstanceRun(self.engine, self.wf, payload,
                               store=self.store, instance=stat.instance,
                               placement=self.placement, plan=self.plan,
-                              spans=self.spans)
+                              spans=self.spans,
+                              budget=self.prewarm_budget)
             # Register BEFORE starting: a node failure racing the start
             # must already see this instance to hand it its lost keys.
             with self._lock:
@@ -664,12 +872,46 @@ class DServe:
                                            len(self._active))
             run.start()
             th = threading.Thread(target=finish, args=(stat, run),
-                                  daemon=True, name=f"dserve-{stat.instance}")
+                                  daemon=True,
+                                  name=f"dserve-{stat.instance}")
             th.start()
             threads.append(th)
 
-        for th in threads:
-            th.join(self.engine.get_timeout * 2)
+        scaler_stop = self._start_autoscaler(t0)
+        try:
+            for i, stat in enumerate(stats):
+                delay = stat.arrival - (time.monotonic() - t0)
+                if delay > 0:
+                    time.sleep(delay)
+                reg.counter("serve_arrivals_total", **labels).inc()
+                with self._lock:
+                    if self.max_inflight is None \
+                            or inflight[0] < self.max_inflight:
+                        inflight[0] += 1
+                        admit = "run"
+                    elif self.queue_depth is None \
+                            or len(admission_queue) < self.queue_depth:
+                        admission_queue.append(
+                            (i, stat, time.monotonic()))
+                        admit = "queue"
+                    else:
+                        admit = "shed"
+                if admit == "run":
+                    launch(i, stat)
+                elif admit == "queue":
+                    reg.counter("serve_queued_total", **labels).inc()
+                else:
+                    stat.shed = True
+                    stat.error = "shed: admission queue full"
+                    reg.counter("serve_shed_total", **labels).inc()
+                    resolve_one()
+
+            all_done.wait(self.engine.get_timeout * 2)
+            for th in list(threads):
+                th.join(self.engine.get_timeout * 2)
+        finally:
+            if scaler_stop is not None:
+                scaler_stop.set()
         if killer is not None:
             killer.join(1.0)
         report.wall_time = time.monotonic() - t0
@@ -685,12 +927,47 @@ class DServe:
         report.prewarm_hits = int(_delta("container_prewarm_hits"))
         report.evictions = int(_delta("container_evictions"))
         report.container_seconds = _delta("container_seconds")
+        report.queued = int(_delta("serve_queued_total"))
+        report.shed = int(_delta("serve_shed_total"))
         per_node = {n: int(v) for n, v in reg.label_values(
             "dstore_peak_resident_bytes", "node").items()}
         report.peak_resident_per_node = per_node
         report.peak_resident_bytes = max(per_node.values(), default=0)
         self._publish_run_metrics(report)
         return report
+
+    # ------------------------------------------------------------------
+    def _admit_next(self, queue, inflight, launch, reg, labels) -> None:
+        """A finished instance hands its admission slot to the oldest
+        queued arrival (FIFO); with an empty queue the slot is freed."""
+        with self._lock:
+            if not queue:
+                inflight[0] -= 1
+                return
+            i, stat, enq = queue.popleft()
+        wait = time.monotonic() - enq
+        stat.queue_wait = wait
+        reg.histogram("serve_queue_wait_seconds", **labels).observe(wait)
+        launch(i, stat)
+
+    def _start_autoscaler(self, t0: float):
+        """Run the DScale control loop for the duration of one run: every
+        ``cfg.interval`` seconds the autoscaler reads registry rates and
+        re-targets the container pools.  Returns the stop event (None when
+        autoscaling is off)."""
+        del t0  # the autoscaler shares the service's monotonic clock
+        if self.autoscaler is None:
+            return None
+        stop = threading.Event()
+        interval = self.autoscaler.cfg.interval
+
+        def loop() -> None:
+            while not stop.wait(interval):
+                self.autoscaler.step(time.monotonic())
+
+        threading.Thread(target=loop, daemon=True,
+                         name="dscale-autoscaler").start()
+        return stop
 
     def _publish_run_metrics(self, report: ServeReport) -> None:
         """Run-level serving metrics into the registry (latency histogram,

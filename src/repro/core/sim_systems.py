@@ -71,8 +71,13 @@ class SimSystem:
                  pattern: str, plane, prewarm: bool, sandbox: bool,
                  central_sched: bool, name: str,
                  single_node: str | None = None, streaming: bool = False,
-                 spans=None):
+                 spans=None, budget=None):
         self.env = env
+        # DScale prewarm budget (scale.py PrewarmBudget) on the virtual
+        # clock: every speculative container boot must be granted
+        # container-seconds first; denied boots are dropped (the §3.2
+        # heuristic is free only when no budget is installed).
+        self.budget = budget
         # DScope span tracer (obs.py) on the VIRTUAL clock — the driver
         # (run_open_loop) rebinds tracer.clock to env.now.  Spans use
         # explicit parents, never thread-local context: simulated
@@ -193,8 +198,8 @@ class SimSystem:
             yield self.env.timeout(self.cfg.knix_process_start)
             return None
         pool = n.pool(self.image(fname))
-        yield pool.acquire()
-        return pool
+        lease = yield pool.acquire()
+        return lease
 
     def _run_function(self, res: InstanceResult, fname: str,
                       on_complete) -> None:
@@ -211,12 +216,12 @@ class SimSystem:
             sp = self.spans.start(fname, "invoke", parent=res.span,
                                   node=node)
             acq = self.spans.start(fname, "acquire", parent=sp, node=node)
-        pool = yield self.env.process(self._acquire_container(node, fname))
+        lease = yield self.env.process(self._acquire_container(node, fname))
         if sp is not None:
             self.spans.end(acq)
         if res.cancelled:
-            if pool is not None:
-                pool.release()
+            if lease is not None:
+                lease.release()
             if sp is not None:
                 self.spans.end(sp, cancelled=True)
             return
@@ -235,8 +240,8 @@ class SimSystem:
         yield n.cores.acquire()
         if res.cancelled:
             n.cores.release()
-            if pool is not None:
-                pool.release()
+            if lease is not None:
+                lease.release()
             if sp is not None:
                 self.spans.end(sp, cancelled=True)
             return
@@ -260,8 +265,8 @@ class SimSystem:
                     for k in f.outputs]
         if puts:
             yield all_of(self.env, puts)
-        if pool is not None:
-            pool.release()
+        if lease is not None:
+            lease.release()
         res.completed[fname] = self.env.now
         if sp is not None:
             self.spans.end(sp)
@@ -335,6 +340,17 @@ class SimSystem:
                         continue
                     pool = self.cluster.nodes[node].pool(self.image(fn2))
                     if pool.available == 0:   # nothing idle NOR booting
+                        # DScale: a budget prices the speculative boot at
+                        # cold_start container-seconds (virtual clock);
+                        # denial drops it — the request path then pays
+                        # the cold start instead.
+                        if self.budget is not None:
+                            grant = self.budget.request(
+                                fn2, self.cfg.cold_start, slack=0.0,
+                                now=self.env.now)
+                            if grant is None \
+                                    or not self.budget.settle(grant):
+                                continue
                         pool.prewarm()
 
         def local_on_complete(fname: str):
@@ -415,8 +431,19 @@ class SimSystem:
 
 # ----------------------------------------------------------------------
 def make_system(name: str, env: Env, cluster: Cluster,
-                wf: Workflow, *, spans=None) -> SimSystem:
-    """Factory mapping paper system names to configurations."""
+                wf: Workflow, *, spans=None, budget=None) -> SimSystem:
+    """Factory mapping paper system names to configurations.
+
+    ``budget`` (a :class:`repro.core.scale.PrewarmBudget`) prices every
+    speculative container boot in container-seconds; None keeps the
+    classic free-prewarm behavior."""
+    system = _make_system(name, env, cluster, wf, spans=spans)
+    system.budget = budget
+    return system
+
+
+def _make_system(name: str, env: Env, cluster: Cluster,
+                 wf: Workflow, *, spans=None) -> SimSystem:
     if name == "cflow":
         return SimSystem(env, cluster, wf, pattern="controlflow",
                          plane=CentralPlane(env, cluster), prewarm=False,

@@ -56,6 +56,32 @@ class SimConfig:
         return [MASTER] + self.worker_names()
 
 
+class _SimLease:
+    """Virtual-clock lease handle: delivered as the ``acquire`` event's
+    value, so a sim process writes ``lease = yield pool.acquire()`` and
+    later ``lease.release()`` — returning the *specific* leased container
+    (the simulator twin of :class:`repro.core.serve.Lease`)."""
+
+    __slots__ = ("_pool", "lease")
+
+    def __init__(self, pool: "_ContainerPool", lease):
+        self._pool = pool
+        self.lease = lease
+
+    @property
+    def cold(self) -> bool:
+        return self.lease.cold
+
+    @property
+    def delay(self) -> float:
+        return self.lease.delay
+
+    def release(self) -> None:
+        p = self._pool
+        p.model.release(self.lease, p.env.now)
+        p._reconcile_cap()
+
+
 class _ContainerPool:
     """Container pool for one (node, function-image) pair — a virtual-clock
     adapter over the shared lifecycle model
@@ -63,10 +89,14 @@ class _ContainerPool:
     threaded serving layer share one implementation of cold boot, warm
     reuse, keep-alive TTL eviction, prewarm, and the derived metrics.
 
-    ``acquire`` yields the startup delay: 0 for a warm hit, the residual
-    boot time when joining a container that is already booting (a prewarm
-    in flight), ``cold_start`` otherwise.  Booted containers hold one slot
-    of the node's container capacity until TTL eviction reclaims it.
+    ``acquire`` returns an event that triggers — after the startup delay:
+    0 for a warm hit, the residual boot time when joining a container that
+    is already booting (a prewarm in flight), ``cold_start`` otherwise —
+    with a :class:`_SimLease` pinning *which* container was leased (the
+    same lease-token discipline as the threaded engine; releasing "some
+    busy container" corrupts idle_since/TTL accounting).  Booted
+    containers hold one slot of the node's container capacity until TTL
+    eviction reclaims it.
     """
 
     def __init__(self, env: Env, cold_start: float, cap: Resource,
@@ -102,28 +132,43 @@ class _ContainerPool:
 
     # -- lifecycle --------------------------------------------------------
     def acquire(self):
-        delay = self.model.try_acquire_warm(self.env.now)
+        lease = self.model.try_acquire_warm(self.env.now)
         self._reconcile_cap()
-        if delay is not None:
-            return self.env.timeout(delay, delay)
+        if lease is not None:
+            return self.env.timeout(lease.delay, _SimLease(self, lease))
         done = self.env.event()
 
         def boot(_):
             boots_before = self.model.boots
-            d, _cold = self.model.acquire(self.env.now)
+            lease = self.model.acquire(self.env.now)
             if self.model.boots == boots_before:
                 # A container became idle while we were queued on capacity:
                 # no new boot happened, so hand the slot straight back
                 # (otherwise the node's effective capacity leaks away).
                 self.cap.release()
             self._reconcile_cap()
-            self.env._at(self.env.now + d, done.trigger, d)
+            self.env._at(self.env.now + lease.delay, done.trigger,
+                         _SimLease(self, lease))
         self.cap.acquire().add_waiter(boot)
         return done
 
-    def release(self) -> None:
-        self.model.release(self.env.now)
+    def set_target(self, target: int | None) -> tuple[int, int]:
+        """DScale autoscaler hook (virtual clock): pin the pool's live
+        target, booting up to it within the node's container capacity and
+        releasing capacity for early-reclaimed idles."""
+        if target is not None:
+            # Scale-up boots consume node capacity like any other boot;
+            # clamp to what the capacity Resource can grant right now.
+            room = self.cap.capacity - self.cap.in_use
+            target_now = min(int(target), self.model.live() + max(0, room))
+            booted, _ = self.model.set_target(target_now, self.env.now)
+            self.model.target = int(target)
+            for _ in range(booted):
+                self.cap.acquire()
+        else:
+            self.model.set_target(None, self.env.now)
         self._reconcile_cap()
+        return (0, 0)
 
     def prewarm(self) -> Event:
         """Boot one container ahead of need; triggers when one is ready.

@@ -21,11 +21,11 @@ from repro.core.workloads import serving_chain, serving_fanout
 
 def test_pool_cold_then_warm():
     p = ContainerPool("img", cold_start=0.5, keepalive=10.0)
-    delay, cold = p.acquire(now=0.0)
-    assert (delay, cold) == (0.5, True) and p.cold_starts == 1
-    p.release(now=1.0)
-    delay, cold = p.acquire(now=2.0)
-    assert (delay, cold) == (0.0, False)
+    lease = p.acquire(now=0.0)
+    assert (lease.delay, lease.cold) == (0.5, True) and p.cold_starts == 1
+    p.release(lease, now=1.0)
+    lease = p.acquire(now=2.0)
+    assert (lease.delay, lease.cold) == (0.0, False)
     assert p.warm_hits == 1 and p.cold_starts == 1
 
 
@@ -36,15 +36,15 @@ def test_pool_prewarm_join():
     assert p.prewarm(now=0.0) == 1.0
     assert p.prewarm(now=0.1) == pytest.approx(0.9)   # no second boot
     assert p.prewarm_boots == 1
-    delay, cold = p.acquire(now=0.4)
-    assert not cold and delay == pytest.approx(0.6)
+    lease = p.acquire(now=0.4)
+    assert not lease.cold and lease.delay == pytest.approx(0.6)
     assert p.prewarm_hits == 1 and p.cold_starts == 0
 
 
 def test_pool_keepalive_eviction_and_container_seconds():
     p = ContainerPool("img", cold_start=0.5, keepalive=2.0)
-    p.acquire(now=0.0)
-    p.release(now=1.0)
+    lease = p.acquire(now=0.0)
+    p.release(lease, now=1.0)
     assert p.idle_count(1.0) == 1
     assert p.sweep(now=2.9) == 0            # TTL not yet expired
     assert p.sweep(now=3.1) == 1            # idle since 1.0 + 2.0 < 3.1
@@ -52,14 +52,15 @@ def test_pool_keepalive_eviction_and_container_seconds():
     # lifetime accounted 0.0 -> 3.0 (eviction instant = idle + keepalive)
     assert p.container_seconds(10.0) == pytest.approx(3.0)
     # next acquire is cold again
-    _, cold = p.acquire(now=5.0)
-    assert cold
+    assert p.acquire(now=5.0).cold
 
 
-def test_pool_release_without_acquire():
+def test_pool_double_release_raises():
     p = ContainerPool("img")
+    lease = p.acquire(now=0.0)
+    p.release(lease, now=1.0)
     with pytest.raises(RuntimeError):
-        p.release(now=0.0)
+        p.release(lease, now=2.0)
 
 
 def test_pool_shutdown_finalizes_seconds():
@@ -303,10 +304,12 @@ def test_instance_runs_share_store_without_collision():
 
 def test_container_service_metrics_aggregate():
     svc = ContainerService(["node0"], keepalive=10.0, max_per_node=4)
-    assert svc.acquire("node0", "img", cold_start=0.0) is True
-    svc.release("node0", "img")
-    assert svc.acquire("node0", "img", cold_start=0.0) is False
-    svc.release("node0", "img")
+    lease = svc.acquire("node0", "img", cold_start=0.0)
+    assert lease.cold is True
+    svc.release("node0", "img", lease)
+    lease = svc.acquire("node0", "img", cold_start=0.0)
+    assert lease.cold is False
+    svc.release("node0", "img", lease)
     svc.prewarm("node0", "img2", cold_start=0.0)
     assert svc.cold_starts == 1
     assert svc.warm_hits == 1
